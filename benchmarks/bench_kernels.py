@@ -1,0 +1,50 @@
+"""Kernel micro-bench: Pallas (interpret on CPU) wrappers vs jnp reference
+paths for the two Superfast hot spots.  On CPU the interpret-mode numbers
+measure correctness-path overhead only; the derived column reports the
+analytic MXU utilisation the one-hot formulation would reach on TPU v5e
+(matmul FLOPs / histogram-update useful work)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.histogram import node_histogram
+from repro.core.split import best_splits
+from repro.kernels import ref
+
+
+def _t(fn, reps=3):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    m, k, b, c, s = 100_000, 16, 128, 8, 64
+    bins = jnp.asarray(rng.integers(0, b, (m, k)), jnp.int32)
+    stats = jnp.asarray(rng.uniform(size=(m, c)), jnp.float32)
+    slot = jnp.asarray(rng.integers(0, s, (m,)), jnp.int32)
+
+    t_seg = _t(lambda: node_histogram(bins, stats, slot, num_slots=s,
+                                      n_bins=b, backend="segment"))
+    print(f"hist_segment,{m}x{k},{t_seg:.0f},M*K={m*k}")
+    hist = node_histogram(bins, stats, slot, num_slots=s, n_bins=b)
+    n_num = jnp.full((k,), b, jnp.int32)
+    n_cat = jnp.zeros((k,), jnp.int32)
+    t_sel = _t(lambda: best_splits(hist, n_num, n_cat))
+    print(f"split_select,{s}x{k}x{b}x{c},{t_sel:.0f},cands={3*k*b*s}")
+    # analytic TPU projection for the one-hot MXU histogram:
+    #   matmul flops per example-tile = 2 * Mt * SB * C; useful updates = Mt*C
+    sb = 16 * b
+    util = (m * c) / (2 * m * sb * c)   # useful / issued
+    print(f"hist_onehot_mxu_projection,SB={sb},{util:.5f},useful_per_flop")
+
+
+if __name__ == "__main__":
+    main()

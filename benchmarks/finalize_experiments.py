@@ -1,0 +1,59 @@
+"""Assemble the final experiments/dryrun.json and inject the §Roofline
+markdown table into EXPERIMENTS.md.
+
+Final JSON = final single-pod sweep (post-§Perf code) + the multi-pod
+compile-proof rows from the v1 sweep (the 2x16x16 pass is a lower+compile
+gate; the roofline TABLE is single-pod per the brief).  Multi-pod rows are
+tagged `"note": "pre-perf-iteration baseline"`.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main(single="experiments/dryrun_final_single.json",
+         multi="experiments/dryrun_baseline.json",
+         out="experiments/dryrun.json",
+         exp_md="EXPERIMENTS.md"):
+    rows = json.load(open(single))
+    multi_rows = [r for r in json.load(open(multi)) if r["mesh"] == "2x16x16"]
+    for r in multi_rows:
+        r["note"] = "multi-pod compile proof (pre-perf-iteration baseline)"
+    allr = rows + multi_rows
+    json.dump(allr, open(out, "w"), indent=1, default=str)
+
+    # markdown table for the single-pod roofline
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "bottleneck | 6ND/HLO | frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"].startswith("SKIP"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — |")
+        elif r["status"] == "OK":
+            frac = (r["compute_s"] / r["step_lower_bound_s"]
+                    if r["step_lower_bound_s"] else 0)
+            mvh = r.get("model_vs_hlo")
+            mvh_s = f"{mvh:.2f}" if mvh is not None else "—"
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"{r['bottleneck']} | {mvh_s} | {frac:.2f} |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"FAIL | — | — |")
+    table = "\n".join(lines)
+
+    md = open(exp_md).read()
+    begin, end = "<!-- ROOFLINE:BEGIN -->", "<!-- ROOFLINE:END -->"
+    pre = md.split(begin)[0]
+    post = md.split(end)[1]
+    open(exp_md, "w").write(pre + begin + "\n" + table + "\n" + end + post)
+    n_ok = sum(r["status"] == "OK" for r in allr)
+    n_skip = sum(r["status"].startswith("SKIP") for r in allr)
+    print(f"final: {n_ok} OK / {n_skip} SKIP / {len(allr)-n_ok-n_skip} FAIL")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,69 @@
+"""§Roofline report generator: reads experiments/dryrun.json (produced by
+launch/dryrun.py) and prints the per-(arch x shape x mesh) three-term table
+in CSV + a markdown table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path="experiments/dryrun.json"):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r):
+    if r["status"] != "OK":
+        return None
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"], "bottleneck": r["bottleneck"],
+        "model_vs_hlo": r.get("model_vs_hlo"),
+        "hbm_per_dev_gb": (r["memory"]["argument_bytes"]
+                           + r["memory"]["temp_bytes"]) / 2**30,
+        "step_s": r["step_lower_bound_s"],
+        "roofline_frac": (r["compute_s"] / r["step_lower_bound_s"]
+                          if r["step_lower_bound_s"] else None),
+    }
+
+
+def main(path="experiments/dryrun.json", markdown=False):
+    rows = load(path)
+    print("roofline,arch,shape,mesh,compute_s,memory_s,collective_s,"
+          "bottleneck,model_vs_hlo,hbm_per_dev_gb,roofline_frac")
+    for r in rows:
+        f = fmt_row(r)
+        if f is None:
+            print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},,,,"
+                  f"{r['status']},,,")
+            continue
+        print("roofline,{arch},{shape},{mesh},{compute_s:.4f},{memory_s:.4f},"
+              "{collective_s:.4f},{bottleneck},{mvh},{hbm_per_dev_gb:.1f},"
+              "{rf}".format(mvh=(f"{f['model_vs_hlo']:.3f}"
+                                 if f["model_vs_hlo"] else ""),
+                            rf=(f"{f['roofline_frac']:.3f}"
+                                if f["roofline_frac"] else ""), **f))
+    if markdown:
+        print()
+        print("| arch | shape | mesh | compute (s) | memory (s) | "
+              "collective (s) | bottleneck | 6ND/HLO | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            f = fmt_row(r)
+            if f is None:
+                print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — |"
+                      f" — | {r['status']} | — | — |")
+            else:
+                print("| {arch} | {shape} | {mesh} | {compute_s:.4f} | "
+                      "{memory_s:.4f} | {collective_s:.4f} | {bottleneck} | "
+                      "{mvh} | {rf} |".format(
+                          mvh=(f"{f['model_vs_hlo']:.2f}"
+                               if f["model_vs_hlo"] else "—"),
+                          rf=(f"{f['roofline_frac']:.2f}"
+                              if f["roofline_frac"] else "—"), **f))
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:2] or ["experiments/dryrun.json"]),
+         markdown="--md" in sys.argv)

@@ -1,0 +1,7 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    save_pytree, restore_pytree, save_train_state, restore_train_state,
+    latest_step,
+)
+from repro.checkpoint.tree_ckpt import (  # noqa: F401
+    TreeCheckpointer, restore_build_state,
+)

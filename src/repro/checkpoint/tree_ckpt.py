@@ -1,0 +1,49 @@
+"""Fault tolerance for the UDT build: the level-synchronous builder's whole
+state is (tree arrays, example assignment, level cursors) — checkpointed at
+level boundaries through the ``level_callback`` hook, restartable with
+``build_tree(..., resume=restore_build_state(...))``.
+
+Node failure story at pod scale: the build is deterministic given the
+binned table, so a restarted worker set replays from the last completed
+level; stragglers are bounded because per-level work is fixed-shape
+(B bins x S slots regardless of data skew)."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.tree import BuildState
+from repro.checkpoint.checkpoint import save_pytree, restore_pytree, latest_step
+
+
+class TreeCheckpointer:
+    """Use as ``build_tree(..., level_callback=TreeCheckpointer(dir))``."""
+
+    def __init__(self, directory: str, every_levels: int = 1):
+        self.directory = directory
+        self.every = every_levels
+        self._count = 0
+
+    def __call__(self, state: BuildState):
+        self._count += 1
+        if self._count % self.every:
+            return
+        save_pytree(
+            {"arrays": state.arrays, "assign": state.assign},
+            self.directory, state.depth,
+            extra={"level_start": state.level_start,
+                   "level_end": state.level_end,
+                   "next_free": state.next_free,
+                   "depth": state.depth})
+
+
+def restore_build_state(directory: str, template_arrays, template_assign,
+                        step=None) -> BuildState:
+    tree, manifest = restore_pytree(
+        {"arrays": template_arrays, "assign": template_assign},
+        directory, step)
+    ex = manifest["extra"]
+    return BuildState(tree["arrays"], tree["assign"], ex["level_start"],
+                      ex["level_end"], ex["next_free"], ex["depth"])

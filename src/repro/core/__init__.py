@@ -1,0 +1,20 @@
+"""Superfast Selection + Ultrafast Decision Tree — the paper's contribution.
+
+Public API:
+    fit_bins / transform        host-side hybrid-feature binning
+    build_tree / TreeConfig     level-synchronous UDT training
+    predict_bins                Algorithm 7 predict (runtime hyper-params)
+    tune / toot_grid            Training-Only-Once Tuning
+    best_splits                 vectorised Superfast Selection
+"""
+from repro.core.binning import (  # noqa: F401
+    BinnedTable, FeatureMeta, fit_bins, transform, fit_label_classes,
+)
+from repro.core.heuristics import HEURISTICS  # noqa: F401
+from repro.core.histogram import node_histogram, class_stats, moment_stats  # noqa: F401
+from repro.core.split import (  # noqa: F401
+    best_splits, evaluate_predicate, SplitDecision, OP_LE, OP_GT, OP_EQ,
+)
+from repro.core.tree import Tree, TreeConfig, build_tree, BuildState  # noqa: F401
+from repro.core.predict import predict_bins, paths  # noqa: F401
+from repro.core.tuning import tune, toot_grid, prune_stats, TuneResult  # noqa: F401

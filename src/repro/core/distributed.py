@@ -1,0 +1,176 @@
+"""Distributed UDT build: the paper's technique on the production mesh.
+
+Parallelism (mirrors how distributed tree-boosting systems scale, but with
+jax-native collectives instead of MPI/NCCL):
+
+  * **data parallel** over the ``('pod', 'data')`` mesh axes: each device
+    holds an example shard and builds local ``H[S, K_l, B, C]`` histograms;
+    one ``psum`` per level chunk merges them.  Collective bytes per chunk =
+    ``S*K*B*C*4`` — independent of M, which is exactly why binned Superfast
+    Selection scales (the paper's O(N*C) intermediate-statistics insight is
+    what makes the collective small).
+  * **feature parallel** over the ``'model'`` axis: features are sharded;
+    each shard runs Superfast Selection on its own features and a tiny
+    ``all_gather`` of per-node (score, feat, bin, op) tuples + argmax picks
+    the global winner.  Routing is one psum'd bit per example (only the
+    winning feature's owner evaluates the predicate).
+
+Both compose; the multi-pod dry-run lowers this exact step.  The build is
+level-synchronous, so fault tolerance = checkpoint the (arrays, assign,
+cursor) state each level and restart from the last completed level
+(checkpoint/tree_ckpt.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.binning import BinnedTable
+from repro.core.tree import (Tree, TreeConfig, _auto_chunk_slots, _chunk_step,
+                             _grow, _init_arrays, _prepare, _route_step)
+
+__all__ = ["DistConfig", "build_tree_distributed", "make_sharded_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    data_axes: tuple = ("data",)       # example-sharding mesh axes
+    model_axis: str | None = "model"   # feature-sharding mesh axis (or None)
+    slot_scatter: bool = True          # reduce_scatter histograms over slots
+
+
+def _pad_to(x, mult, axis, fill):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths, constant_values=fill)
+
+
+def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
+                      k_pad: int, c: int, max_nodes: int, num_slots: int):
+    """Build the shard_map'd level-chunk step for a given slot count.
+
+    This is also what launch/dryrun.py lowers for the UDT rows of the
+    roofline table (the paper-technique cell)."""
+    dspec = P(dist.data_axes)          # examples
+    fspec = P(None, dist.model_axis)   # [M, K] -> features on model axis
+    rep = P()
+
+    scatter_ok = dist.slot_scatter and num_slots % max(
+        1, int(np.prod([mesh.shape[a] for a in dist.data_axes]))) == 0
+    step_kw = dict(kw, num_slots=num_slots, data_axes=dist.data_axes,
+                   model_axis=dist.model_axis, slot_scatter=scatter_ok)
+
+    def body(bins, stats, lbins, yv, assign, arrays, n_num, n_cat,
+             cs, cn, nf, depth):
+        return _chunk_step(bins, stats, lbins, yv, assign, arrays, n_num,
+                           n_cat, cs, cn, nf, depth, **step_kw)
+
+    in_specs = (P(dist.data_axes, dist.model_axis),  # bins [M,K]
+                dspec,                               # stats [M,C]
+                dspec,                               # lbins [M]
+                dspec,                               # yv [M]
+                dspec,                               # assign [M]
+                rep,                                 # tree arrays (replicated)
+                P(dist.model_axis),                  # n_num [K]
+                P(dist.model_axis),                  # n_cat [K]
+                rep, rep, rep, rep)                  # scalars
+    sharded = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=(rep, rep), check_vma=False)
+    return jax.jit(sharded)
+
+
+def make_sharded_route(mesh: Mesh, dist: DistConfig):
+    def body(bins, assign, arrays, n_num, start, end):
+        return _route_step(bins, assign, arrays, n_num, start, end,
+                           model_axis=dist.model_axis)
+
+    in_specs = (P(dist.data_axes, dist.model_axis), P(dist.data_axes),
+                P(), P(dist.model_axis), P(), P())
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                                 out_specs=P(dist.data_axes),
+                                 check_vma=False))
+
+
+def build_tree_distributed(table: BinnedTable, y,
+                           config: TreeConfig = TreeConfig(),
+                           mesh: Mesh | None = None,
+                           dist: DistConfig = DistConfig(),
+                           n_classes: int | None = None,
+                           level_callback=None) -> Tree:
+    """Distributed UDT training.  Produces the SAME tree as build_tree
+    (tests/test_distributed.py asserts exact agreement) while sharding
+    examples over ``dist.data_axes`` and features over ``dist.model_axis``."""
+    bins_np, stats_np, lbins_np, yv_np, c, n_label_bins = _prepare(
+        table, y, config, n_classes)
+    m, k = bins_np.shape
+    b = int(table.n_bins)
+
+    d_shards = int(np.prod([mesh.shape[a] for a in dist.data_axes]))
+    f_shards = mesh.shape[dist.model_axis] if dist.model_axis else 1
+
+    # pad examples with slot -1 sentinels (assign = -1 keeps them inert) and
+    # features with all-missing columns (never selectable)
+    bins_p = _pad_to(_pad_to(bins_np, d_shards, 0, 0), f_shards, 1, 0)
+    m_pad, k_pad = bins_p.shape
+    if k_pad > k:  # padded features: every value in the (unused) missing bin
+        bins_p[:, k:] = 0
+    stats_p = _pad_to(stats_np, d_shards, 0, 0.0)
+    lbins_p = _pad_to(lbins_np, d_shards, 0, 0)
+    yv_p = _pad_to(yv_np, d_shards, 0, 0.0)
+    n_num_p = _pad_to(np.asarray(table.n_num), f_shards, 0, 0)
+    n_cat_p = _pad_to(np.asarray(table.n_cat), f_shards, 0, 0)
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    bins_d = put(bins_p, P(dist.data_axes, dist.model_axis))
+    stats_d = put(stats_p, P(dist.data_axes))
+    lbins_d = put(lbins_p, P(dist.data_axes))
+    yv_d = put(yv_p, P(dist.data_axes))
+    n_num_d = put(n_num_p, P(dist.model_axis))
+    n_cat_d = put(n_cat_p, P(dist.model_axis))
+
+    max_nodes = config.max_nodes or min(2 * m + 1, 1 << 22)
+    s_cap = config.chunk_slots or _auto_chunk_slots(
+        k_pad, b, c, config.hist_budget_bytes)
+    arrays = _init_arrays(max_nodes)
+    assign0 = np.full((m_pad,), -1, dtype=np.int32)
+    assign0[:m] = 0                     # padding rows never join any node
+    assign = put(assign0, P(dist.data_axes))
+
+    kw = dict(n_bins=b, heuristic=config.heuristic, task=config.task,
+              min_samples_split=config.min_samples_split,
+              min_samples_leaf=config.min_samples_leaf,
+              max_depth=config.max_depth, max_nodes=max_nodes,
+              hist_backend=config.hist_backend,
+              select_backend=config.select_backend,
+              n_label_bins=n_label_bins)
+
+    step_cache: dict = {}
+    route_fn = make_sharded_route(mesh, dist)
+
+    def step(arrays, assign, cs, cn, next_free, depth, num_slots):
+        if num_slots not in step_cache:
+            step_cache[num_slots] = make_sharded_step(
+                mesh, dist, kw, m_pad, k_pad, c, max_nodes, num_slots)
+        return step_cache[num_slots](
+            bins_d, stats_d, lbins_d, yv_d, assign, arrays, n_num_d, n_cat_d,
+            jnp.int32(cs), jnp.int32(cn), jnp.int32(next_free),
+            jnp.int32(depth))
+
+    def route(assign, arrays, start, end):
+        return route_fn(bins_d, assign, arrays, n_num_d, jnp.int32(start),
+                        jnp.int32(end))
+
+    arrays, n_nodes = _grow(step, route, arrays, assign, s_cap, max_nodes,
+                            level_callback)
+    return Tree(n_nodes=n_nodes, **arrays)

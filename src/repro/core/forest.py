@@ -1,0 +1,108 @@
+"""Beyond-paper: tree ensembles reusing Superfast Selection.
+
+The paper's O(M) selection makes per-tree cost O(K M depth); ensembles just
+multiply tree count, so both bagging (random forest) and gradient boosting
+drop out of the same machinery:
+
+  * RandomForest: bootstrap rows + feature subsampling per tree.  Feature
+    subsampling reuses the padded-feature mechanism (excluded features get
+    n_num = n_cat = 0 and are never selectable) so ALL trees share one
+    binned table and one compiled step.
+  * GradientBoostedTrees: regression trees on residuals (variance mode),
+    i.e. the XGBoost-hist structure with the paper's selection inside.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binning import BinnedTable
+from repro.core.predict import predict_bins
+from repro.core.tree import Tree, TreeConfig, build_tree
+
+__all__ = ["RandomForest", "GradientBoostedTrees"]
+
+
+def _subsample_table(table: BinnedTable, feat_mask: np.ndarray) -> BinnedTable:
+    """Mask out features by zeroing their bin ranges (never selectable)."""
+    return BinnedTable(
+        bins=table.bins,
+        n_num=np.where(feat_mask, table.n_num, 0).astype(np.int32),
+        n_cat=np.where(feat_mask, table.n_cat, 0).astype(np.int32),
+        metas=table.metas, n_bins=table.n_bins)
+
+
+@dataclasses.dataclass
+class RandomForest:
+    n_trees: int = 10
+    max_features: float = 0.7         # fraction of features per tree
+    bootstrap: bool = True
+    config: TreeConfig = dataclasses.field(
+        default_factory=lambda: TreeConfig(max_depth=24))
+    seed: int = 0
+
+    def fit(self, table: BinnedTable, y, n_classes: int):
+        rng = np.random.default_rng(self.seed)
+        m, k = table.bins.shape
+        self.n_classes = n_classes
+        self.trees: list[Tree] = []
+        self.tables: list[BinnedTable] = []
+        y = np.asarray(y)
+        for _ in range(self.n_trees):
+            fm = rng.uniform(size=k) < self.max_features
+            if not fm.any():
+                fm[rng.integers(0, k)] = True
+            sub = _subsample_table(table, fm)
+            if self.bootstrap:
+                idx = rng.integers(0, m, size=m)
+                sub = BinnedTable(bins=sub.bins[idx], n_num=sub.n_num,
+                                  n_cat=sub.n_cat, metas=sub.metas,
+                                  n_bins=sub.n_bins)
+                yy = y[idx]
+            else:
+                yy = y
+            self.trees.append(build_tree(sub, yy, self.config,
+                                         n_classes=n_classes))
+            self.tables.append(sub)
+        return self
+
+    def predict(self, bins):
+        votes = np.zeros((bins.shape[0], self.n_classes))
+        for tree, tab in zip(self.trees, self.tables):
+            p = np.asarray(predict_bins(tree, bins, tab.n_num)).astype(int)
+            votes[np.arange(len(p)), p] += 1
+        return votes.argmax(axis=1)
+
+
+@dataclasses.dataclass
+class GradientBoostedTrees:
+    n_trees: int = 20
+    learning_rate: float = 0.3
+    config: TreeConfig = dataclasses.field(
+        default_factory=lambda: TreeConfig(max_depth=6,
+                                           task="regression_variance"))
+    seed: int = 0
+
+    def fit(self, table: BinnedTable, y):
+        y = np.asarray(y, dtype=np.float32)
+        self.base = float(y.mean())
+        self.trees: list[Tree] = []
+        self.n_num = table.n_num
+        pred = np.full_like(y, self.base)
+        for _ in range(self.n_trees):
+            resid = y - pred
+            tree = build_tree(table, resid, self.config)
+            self.trees.append(tree)
+            step = np.asarray(predict_bins(tree, table.bins, table.n_num))
+            pred = pred + self.learning_rate * step
+        return self
+
+    def predict(self, bins):
+        pred = np.full((bins.shape[0],), self.base, dtype=np.float32)
+        for tree in self.trees:
+            pred += self.learning_rate * np.asarray(
+                predict_bins(tree, bins, self.n_num))
+        return pred

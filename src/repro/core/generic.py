@@ -1,0 +1,58 @@
+"""Generic split selection (paper Algorithm 1) — the O(M*N) baseline.
+
+For every candidate value the feature column and the labels are rescanned
+(one O(M) pass per candidate), exactly the abstraction the paper compares
+against.  Used by benchmarks/bench_selection.py to reproduce the paper's
+Table 5 scaling curve, and by tests as an independent oracle for Superfast
+Selection's chosen split.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heuristics as H
+from repro.core.split import OP_LE, OP_GT, OP_EQ, NEG_INF
+
+__all__ = ["generic_best_split_on_feature"]
+
+
+@functools.partial(jax.jit, static_argnames=("n_classes", "n_bins", "heuristic",
+                                              "min_leaf"))
+def generic_best_split_on_feature(xbin, labels, n_num, n_cat, *, n_classes,
+                                  n_bins, heuristic="info_gain", min_leaf=1):
+    """O(M*N) selection on one (binned) feature.
+
+    xbin: [M] bin ids of the feature; labels: [M] int32.
+    Candidates are every bin id (= every unique value); for each candidate
+    the WHOLE column is rescanned (this is the point: no shared statistics,
+    no prefix sums).  Returns (score, bin, op).
+    """
+    h_fn = H.get(heuristic)
+    m = xbin.shape[0]
+    onehot = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32)  # [M,C]
+    is_num_x = xbin < n_num
+
+    def score_candidate(cand):
+        # one full O(M) scan per candidate, per op
+        def agg(mask):
+            pos = jnp.where(mask[:, None], onehot, 0.0).sum(0)
+            neg = jnp.where(mask[:, None], 0.0, onehot).sum(0)
+            cnt_p, cnt_n = pos.sum(), neg.sum()
+            s = h_fn(pos, neg)
+            return jnp.where((cnt_p >= min_leaf) & (cnt_n >= min_leaf), s, NEG_INF)
+
+        cand_is_num = cand < n_num
+        cand_is_cat = (cand >= n_num) & (cand < n_num + n_cat)
+        s_le = jnp.where(cand_is_num, agg(is_num_x & (xbin <= cand)), NEG_INF)
+        s_gt = jnp.where(cand_is_num, agg(is_num_x & (xbin > cand)), NEG_INF)
+        s_eq = jnp.where(cand_is_cat, agg(xbin == cand), NEG_INF)
+        return jnp.stack([s_le, s_gt, s_eq])
+
+    cands = jnp.arange(n_bins, dtype=jnp.int32)
+    scores = jax.lax.map(score_candidate, cands)            # [N, 3]
+    flat = scores.reshape(-1)
+    best = jnp.argmax(flat)
+    return flat[best], (best // 3).astype(jnp.int32), (best % 3).astype(jnp.int32)

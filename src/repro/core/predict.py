@@ -1,0 +1,83 @@
+"""Vectorised prediction (paper Algorithm 7).
+
+The predict function takes ``max_depth`` / ``min_samples_split`` as RUNTIME
+arguments: a full-grown tree answers queries *as if* it had been trained with
+those hyper-parameters (it returns the current node's label as soon as the
+walk hits a leaf, a node with fewer than ``min_split`` examples, or the depth
+limit).  This is what makes Training-Only-Once Tuning possible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.split import evaluate_predicate
+from repro.core.tree import Tree
+
+__all__ = ["predict_bins", "paths"]
+
+
+def _descend(tree_arrays, bins, n_num, node):
+    f = jnp.maximum(tree_arrays["feat"][node], 0)
+    xb = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
+    pos = evaluate_predicate(xb, n_num[f], tree_arrays["op"][node],
+                             tree_arrays["tbin"][node])
+    return jnp.where(pos, tree_arrays["left"][node],
+                     tree_arrays["right"][node])
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps",))
+def _walk(tree_arrays, bins, n_num, dmax, smin, *, num_steps):
+    m = bins.shape[0]
+    node = jnp.zeros((m,), dtype=jnp.int32)
+
+    def body(i, node):
+        can = (~tree_arrays["leaf"][node]
+               & (tree_arrays["left"][node] >= 0)
+               & (tree_arrays["count"][node] >= smin)
+               & (i < dmax - 1))
+        nxt = _descend(tree_arrays, bins, n_num, node)
+        return jnp.where(can, nxt, node)
+
+    node = jax.lax.fori_loop(0, num_steps, body, node)
+    return tree_arrays["label"][node]
+
+
+def predict_bins(tree: Tree, bins, n_num, *, max_depth: int = 1 << 30,
+                 min_samples_split: int = 0) -> jax.Array:
+    """Predict labels for pre-binned examples under runtime hyper-params."""
+    arrays = tree._asdict()
+    steps = max(1, tree.max_tree_depth)
+    return _walk({k: arrays[k] for k in
+                  ("feat", "op", "tbin", "label", "count", "left", "right", "leaf")},
+                 jnp.asarray(bins), jnp.asarray(n_num),
+                 jnp.int32(max_depth), jnp.int32(min_samples_split),
+                 num_steps=steps)
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps",))
+def _paths(tree_arrays, bins, n_num, *, num_steps):
+    m = bins.shape[0]
+    node0 = jnp.zeros((m,), dtype=jnp.int32)
+
+    def step(node, _):
+        can = (~tree_arrays["leaf"][node]) & (tree_arrays["left"][node] >= 0)
+        nxt = _descend(tree_arrays, bins, n_num, node)
+        node = jnp.where(can, nxt, node)
+        return node, node
+
+    _, trail = jax.lax.scan(step, node0, None, length=num_steps - 1)
+    nodes = jnp.concatenate([node0[None], trail], axis=0)   # [T, M]
+    return nodes.T                                          # [M, T]
+
+
+def paths(tree: Tree, bins, n_num):
+    """Full root->leaf walk per example: node ids [M, T] with stay-at-leaf
+    semantics (columns past the leaf repeat the leaf).  T = tree depth."""
+    arrays = tree._asdict()
+    steps = max(1, tree.max_tree_depth)
+    return _paths({k: arrays[k] for k in
+                   ("feat", "op", "tbin", "label", "count", "left", "right", "leaf")},
+                  jnp.asarray(bins), jnp.asarray(n_num), num_steps=steps)

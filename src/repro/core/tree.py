@@ -1,0 +1,441 @@
+"""Ultrafast Decision Tree (paper Algorithm 5), level-synchronous on TPU.
+
+The paper grows the tree with a node queue and filters per-feature sorted
+value lists down the tree.  The TPU-native formulation grows the tree
+**breadth-first, one level per step**: every level performs
+
+  1. ONE histogram pass over all M examples (Superfast statistics
+     collection, O(M*K) scatter work) -- chunked over node slots so the
+     [S, K, B, C] working set stays bounded (VMEM-sized on TPU),
+  2. prefix-sum split selection for every active node at once (O(S*K*B*C)),
+  3. ONE routing pass updating each example's node assignment (O(M)).
+
+Total work for a balanced tree: O(K * M * depth) = O(K M log M) -- the
+paper's complexity, with fixed shapes and `jit`-compiled steps throughout.
+Node ids are allocated level-contiguously, so "which slot does example i
+update" is just `assign[i] - chunk_start`.
+
+The builder is resumable: the carried state (tree arrays + assignment
+vector + level cursor) is checkpointed per level (see checkpoint/), which is
+the fault-tolerance story for the distributed build.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import split as split_mod
+from repro.core.binning import BinnedTable
+from repro.core.histogram import node_histogram, class_stats, moment_stats
+from repro.core.split import best_splits, evaluate_predicate, NEG_INF
+
+__all__ = ["TreeConfig", "Tree", "build_tree", "BuildState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeConfig:
+    max_depth: int = 64               # root has depth 1 (paper convention)
+    max_nodes: int = 0                # 0 -> auto (2*M/min_split bounded)
+    min_samples_split: int = 2
+    min_samples_leaf: int = 1
+    heuristic: str = "info_gain"
+    task: str = "classification"      # | "regression" (paper label-split)
+                                      # | "regression_variance" (beyond-paper)
+    n_label_bins: int = 256           # label binning for regression
+    hist_backend: str = "segment"
+    select_backend: str = "jnp"       # "jnp" | "pallas" (fused split-scan)
+    hist_budget_bytes: int = 1 << 28  # bounds the [S,K,B,C] chunk
+    chunk_slots: int = 0              # 0 -> auto from hist_budget_bytes
+
+
+class Tree(NamedTuple):
+    """Flat tree arrays (max_nodes slots; n_nodes valid)."""
+    feat: jax.Array      # i32, -1 for leaves
+    op: jax.Array        # i32 {OP_LE, OP_GT, OP_EQ}, -1 for leaves
+    tbin: jax.Array      # i32 threshold / category bin
+    score: jax.Array     # f32 split heuristic
+    label: jax.Array     # f32 (class id for cls; mean target for regression)
+    count: jax.Array     # i32 examples reaching the node
+    depth: jax.Array     # i32, root = 1
+    left: jax.Array      # i32 child id or -1
+    right: jax.Array     # i32 child id or -1
+    leaf: jax.Array      # bool
+    n_nodes: int
+
+    @property
+    def max_tree_depth(self) -> int:
+        d = np.asarray(self.depth[: self.n_nodes])
+        return int(d.max()) if d.size else 0
+
+
+class BuildState(NamedTuple):
+    """Per-level resumable build state (fault-tolerance checkpoint unit)."""
+    arrays: dict
+    assign: jax.Array
+    level_start: int
+    level_end: int
+    next_free: int
+    depth: int
+
+
+def _auto_chunk_slots(k: int, b: int, c: int, budget: int) -> int:
+    s = max(1, budget // max(1, k * b * c * 4))
+    return int(min(4096, s))
+
+
+def _init_arrays(max_nodes: int):
+    i32 = lambda fill: jnp.full((max_nodes,), fill, dtype=jnp.int32)
+    return dict(
+        feat=i32(-1), op=i32(-1), tbin=i32(-1),
+        score=jnp.full((max_nodes,), NEG_INF, dtype=jnp.float32),
+        label=jnp.zeros((max_nodes,), dtype=jnp.float32),
+        count=i32(0), depth=i32(0), left=i32(-1), right=i32(-1),
+        leaf=jnp.zeros((max_nodes,), dtype=bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# regression label split (paper Algorithm 6): per-node best binary partition
+# of the (binned) labels by SSE; turns regression into 2-class selection.
+# ---------------------------------------------------------------------------
+
+def _label_split_thresholds(lhist):
+    """lhist: [S, Bl, 3] (count, sum_y, sum_y2) per label bin.
+
+    Returns (tstar [S] best label-bin threshold, mean [S], count [S],
+    sse [S] total node SSE)."""
+    cnt = jnp.cumsum(lhist[..., 0], axis=1)          # [S,Bl]
+    sy = jnp.cumsum(lhist[..., 1], axis=1)
+    tot_c = cnt[:, -1:]
+    tot_s = sy[:, -1:]
+    rc = tot_c - cnt
+    rs = tot_s - sy
+    score = (sy * sy / jnp.where(cnt > 0, cnt, 1.0)
+             + rs * rs / jnp.where(rc > 0, rc, 1.0))
+    score = jnp.where((cnt > 0) & (rc > 0), score, NEG_INF)
+    tstar = jnp.argmax(score, axis=1).astype(jnp.int32)
+    tot_c0 = jnp.where(tot_c[:, 0] > 0, tot_c[:, 0], 1.0)
+    mean = tot_s[:, 0] / tot_c0
+    sum_y2 = jnp.cumsum(lhist[..., 2], axis=1)[:, -1]
+    sse = sum_y2 - tot_s[:, 0] * tot_s[:, 0] / tot_c0
+    return tstar, mean, tot_c[:, 0], sse
+
+
+# ---------------------------------------------------------------------------
+# one chunk of one level: histogram -> Superfast Selection -> node updates
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_slots", "n_bins", "heuristic", "task",
+                     "min_samples_split", "min_samples_leaf", "max_depth",
+                     "max_nodes", "hist_backend", "select_backend",
+                     "n_label_bins", "data_axes", "model_axis",
+                     "slot_scatter"))
+def _chunk_step(bins, stats, lbins, y, assign, arrays, n_num, n_cat,
+                chunk_start, chunk_n, next_free, depth, *,
+                num_slots, n_bins, heuristic, task, min_samples_split,
+                min_samples_leaf, max_depth, max_nodes, hist_backend,
+                select_backend, n_label_bins, data_axes=(), model_axis=None,
+                slot_scatter=False):
+    """Process node slots [chunk_start, chunk_start+chunk_n).
+
+    Returns (arrays, n_children).  All shapes static; chunk_start / chunk_n /
+    next_free / depth are dynamic scalars so one compilation serves the
+    whole build.
+    """
+    s = num_slots
+    k_local = bins.shape[1]
+    scatter_on = bool(slot_scatter and data_axes)
+
+    def reduce_data(x):
+        """Data-parallel histogram reduction.
+
+        slot_scatter (perf iteration, EXPERIMENTS.md §Perf/udt): instead of
+        all-reducing the full [S, K, B, C] histogram to every data shard and
+        selecting redundantly, reduce_scatter it along the SLOT axis — half
+        the collective bytes of a ring all-reduce and 1/dsize of the
+        selection compute per device; the per-slot decisions (a few scalars
+        per node) are all-gathered afterwards by ``regather``."""
+        if scatter_on:
+            for ax in data_axes:
+                x = jax.lax.psum_scatter(x, ax, scatter_dimension=0,
+                                         tiled=True)
+            return x
+        for ax in data_axes:
+            x = jax.lax.psum(x, ax)
+        return x
+
+    def regather(tree):
+        """Reassemble per-slot-shard results back to the full slot axis."""
+        if not scatter_on:
+            return tree
+
+        def g(a):
+            for ax in reversed(data_axes):
+                a = jax.lax.all_gather(a, ax, axis=0, tiled=True)
+            return a
+
+        return jax.tree.map(g, tree)
+
+    def select(hist, n_num_, n_cat_, *, heuristic, min_leaf):
+        base = (split_mod.best_splits_kernel if select_backend == "pallas"
+                else best_splits)
+        dec = base(hist, n_num_, n_cat_, heuristic=heuristic,
+                   min_leaf=min_leaf)
+        if model_axis is None:
+            return dec
+        # feature-parallel: each shard picked its best LOCAL feature; a tiny
+        # all-gather of [S] tuples + argmax yields the global winner.
+        # Tie-breaking must match the single-device flat argmax exactly
+        # (max score, then lowest global candidate index op-major) so the
+        # distributed build reproduces the local tree bit-for-bit —
+        # histogram counts are integers, hence psum-order independent.
+        my = jax.lax.axis_index(model_axis)
+        n_shards = jax.lax.axis_size(model_axis)
+        k_tot = k_local * n_shards
+        feat_g = dec.feat + my * k_local
+        flat_idx = (dec.op * k_tot + feat_g) * n_bins + dec.bin   # global order
+        cand = jnp.stack([dec.score,
+                          feat_g.astype(jnp.float32),
+                          dec.bin.astype(jnp.float32),
+                          dec.op.astype(jnp.float32),
+                          flat_idx.astype(jnp.float32)])          # [5, S]
+        allc = jax.lax.all_gather(cand, model_axis)               # [P, 5, S]
+        best_score = allc[:, 0].max(axis=0)                       # [S]
+        is_max = allc[:, 0] >= best_score[None]
+        key = jnp.where(is_max, allc[:, 4], jnp.float32(3e38))
+        win = jnp.argmin(key, axis=0)                             # [S]
+        pick = lambda j: jnp.take_along_axis(allc[:, j], win[None], axis=0)[0]
+        return split_mod.SplitDecision(
+            pick(0), pick(1).astype(jnp.int32), pick(2).astype(jnp.int32),
+            pick(3).astype(jnp.int32), dec.pos_stats, dec.neg_stats)
+    slot_of_node = assign - chunk_start
+    slot = jnp.where((slot_of_node >= 0) & (slot_of_node < chunk_n),
+                     slot_of_node, -1)
+    slot_ids = jnp.arange(s, dtype=jnp.int32)
+    in_chunk = slot_ids < chunk_n
+    node_ids = jnp.where(in_chunk, chunk_start + slot_ids, max_nodes)
+
+    if task == "regression":
+        # Algorithm 6: per-node label split -> per-example pseudo class.
+        lhist = reduce_data(node_histogram(
+            lbins[:, None], moment_stats(y), slot, num_slots=s,
+            n_bins=n_label_bins, backend=hist_backend)[:, 0])       # [S,Bl,3]
+        tstar, mean, count_f, sse = _label_split_thresholds(lhist)
+        tstar, label, count_f, sse = regather((tstar, mean, count_f, sse))
+        pseudo = (lbins <= tstar[jnp.clip(slot, 0, s - 1)]).astype(jnp.int32)
+        stats = class_stats(pseudo, 2)
+        count = count_f.astype(jnp.int32)
+        pure = sse <= 1e-10 * jnp.maximum(count_f, 1.0)
+        hist = reduce_data(node_histogram(bins, stats, slot, num_slots=s,
+                                          n_bins=n_bins,
+                                          backend=hist_backend))
+        dec = select(hist, n_num, n_cat, heuristic=heuristic,
+                     min_leaf=min_samples_leaf)
+        dec = regather(dec)
+    elif task == "regression_variance":
+        hist = reduce_data(node_histogram(bins, moment_stats(y), slot,
+                                          num_slots=s, n_bins=n_bins,
+                                          backend=hist_backend))
+        tot = hist[:, 0].sum(axis=1)                                # [S,3]
+        count_f = tot[:, 0]
+        safe = jnp.where(count_f > 0, count_f, 1.0)
+        label = tot[:, 1] / safe
+        count = count_f.astype(jnp.int32)
+        pure = (tot[:, 2] - tot[:, 1] ** 2 / safe) <= 1e-10 * jnp.maximum(count_f, 1.0)
+        dec = select(hist, n_num, n_cat, heuristic="sse",
+                     min_leaf=min_samples_leaf)
+        count, label, pure, dec = regather((count, label, pure, dec))
+    else:
+        hist = reduce_data(node_histogram(bins, stats, slot, num_slots=s,
+                                          n_bins=n_bins,
+                                          backend=hist_backend))
+        tot = hist[:, 0].sum(axis=1)                                # [S,C]
+        count = tot.sum(-1).astype(jnp.int32)
+        label = jnp.argmax(tot, axis=-1).astype(jnp.float32)
+        pure = tot.max(-1) == tot.sum(-1)
+        dec = select(hist, n_num, n_cat, heuristic=heuristic,
+                     min_leaf=min_samples_leaf)
+        count, label, pure, dec = regather((count, label, pure, dec))
+
+    no_split = dec.score <= NEG_INF / 2
+    is_leaf = (in_chunk & (pure | no_split
+                           | (count < min_samples_split)
+                           | (depth >= max_depth)))
+    wants_split = in_chunk & ~is_leaf
+
+    # allocate children; respect the node budget (overflow -> forced leaf)
+    offs = jnp.cumsum(wants_split.astype(jnp.int32)) - 1
+    left = next_free + 2 * offs
+    right = left + 1
+    fits = right < max_nodes
+    is_leaf = is_leaf | (wants_split & ~fits)
+    wants_split = wants_split & fits
+    n_children = 2 * wants_split.sum(dtype=jnp.int32)
+
+    left = jnp.where(wants_split, left, -1)
+    right = jnp.where(wants_split, right, -1)
+
+    def upd(name, vals, ids=node_ids):
+        arrays[name] = arrays[name].at[ids].set(vals, mode="drop")
+
+    upd("feat", jnp.where(wants_split, dec.feat, -1))
+    upd("op", jnp.where(wants_split, dec.op, -1))
+    upd("tbin", jnp.where(wants_split, dec.bin, -1))
+    upd("score", jnp.where(wants_split, dec.score, NEG_INF))
+    upd("label", label)
+    upd("count", count)
+    upd("depth", jnp.full((s,), depth, dtype=jnp.int32))
+    upd("left", left)
+    upd("right", right)
+    upd("leaf", is_leaf)
+    return arrays, n_children
+
+
+@functools.partial(jax.jit, static_argnames=("model_axis",))
+def _route_step(bins, assign, arrays, n_num, level_start, level_end, *,
+                model_axis=None):
+    node = assign
+    left = arrays["left"][node]
+    active = (node >= level_start) & (node < level_end) & (left >= 0)
+    f = jnp.maximum(arrays["feat"][node], 0)
+    if model_axis is None:
+        xb = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
+        pos = evaluate_predicate(xb, n_num[f], arrays["op"][node],
+                                 arrays["tbin"][node])
+    else:
+        # feature-parallel routing: only the shard owning the winning
+        # feature evaluates the predicate; one bit per example is psum'd
+        # across the model axis (the paper-technique collective that the
+        # dry-run measures).
+        k_local = bins.shape[1]
+        my = jax.lax.axis_index(model_axis)
+        mine = (f // k_local) == my
+        f_l = jnp.where(mine, f % k_local, 0)
+        xb = jnp.take_along_axis(bins, f_l[:, None], axis=1)[:, 0]
+        local = evaluate_predicate(xb, n_num[f_l], arrays["op"][node],
+                                   arrays["tbin"][node]) & mine
+        pos = jax.lax.psum(local.astype(jnp.int32), model_axis) > 0
+    nxt = jnp.where(pos, left, arrays["right"][node])
+    return jnp.where(active, nxt, node)
+
+
+# ---------------------------------------------------------------------------
+# host-driven level loop (paper Algorithm 5's queue, one level per tick)
+# ---------------------------------------------------------------------------
+
+def _prepare(table: BinnedTable, y, config: TreeConfig,
+             n_classes: int | None):
+    """Host-side input prep shared by the local and distributed builders."""
+    bins = np.asarray(table.bins)
+    m, k = bins.shape
+    if config.task == "classification":
+        y = np.asarray(y)
+        c = int(n_classes if n_classes is not None else int(y.max()) + 1)
+        stats = np.eye(c, dtype=np.float32)[np.asarray(y, dtype=np.int64)]
+        lbins = np.zeros((m,), dtype=np.int32)
+        yv = np.zeros((m,), dtype=np.float32)
+        n_label_bins = 1
+    else:
+        yv = np.asarray(y, dtype=np.float32)
+        c = 3 if config.task == "regression_variance" else 2
+        stats = np.zeros((m, c), dtype=np.float32)
+        # bin the labels once (the paper pre-sorts them once) for Alg. 6
+        yy = np.asarray(y, dtype=np.float64)
+        uniq = np.unique(yy)
+        if uniq.size > config.n_label_bins:
+            edges = np.unique(np.quantile(
+                yy, np.linspace(0, 1, config.n_label_bins), method="nearest"))
+        else:
+            edges = uniq
+        lb = np.minimum(np.searchsorted(edges, yy, side="left"),
+                        len(edges) - 1)
+        lbins = lb.astype(np.int32)
+        n_label_bins = int(len(edges))
+    return bins, stats, lbins, yv, c, n_label_bins
+
+
+def _grow(step, route, arrays, assign, s_cap, max_nodes, level_callback,
+          cursors=(0, 1, 1, 1)):
+    """The level-synchronous queue (paper Algorithm 5), host-driven.
+
+    ``step(arrays, assign, cs, cn, next_free, depth, num_slots)`` returns
+    (arrays, n_children); ``route(assign, arrays, start, end)`` returns the
+    new per-example node assignment.  ``cursors`` resumes a checkpointed
+    build from the start of a level (fault tolerance)."""
+    level_start, level_end, next_free, depth = cursors
+    while level_start < level_end:
+        # slot count adapts to the frontier (bounded by the VMEM/HBM
+        # budget); jit caches one compilation per power-of-two size.
+        s = min(s_cap, max(16, 1 << (level_end - level_start - 1).bit_length()))
+        for cs in range(level_start, level_end, s):
+            cn = min(s, level_end - cs)
+            arrays, n_children = step(arrays, assign, cs, cn, next_free,
+                                      depth, s)
+            next_free += int(n_children)
+        assign = route(assign, arrays, level_start, level_end)
+        level_start, level_end = level_end, next_free
+        depth += 1
+        if level_callback is not None:
+            level_callback(BuildState(arrays, assign, level_start,
+                                      level_end, next_free, depth))
+    return arrays, next_free
+
+
+def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
+               n_classes: int | None = None,
+               level_callback=None, resume: "BuildState | None" = None) -> Tree:
+    """Train a UDT.  ``y`` is int class ids (classification) or float
+    targets (regression modes).  ``level_callback(BuildState)`` is invoked
+    after each completed level (checkpointing / progress hooks)."""
+    bins_np, stats_np, lbins_np, yv_np, c, n_label_bins = _prepare(
+        table, y, config, n_classes)
+    m, k = bins_np.shape
+    b = int(table.n_bins)
+    bins = jnp.asarray(bins_np)
+    stats = jnp.asarray(stats_np)
+    lbins = jnp.asarray(lbins_np)
+    yv = jnp.asarray(yv_np)
+    n_num = jnp.asarray(table.n_num)
+    n_cat = jnp.asarray(table.n_cat)
+
+    max_nodes = config.max_nodes or min(2 * m + 1, 1 << 22)
+    s_cap = config.chunk_slots or _auto_chunk_slots(
+        k, b, c, config.hist_budget_bytes)
+    if resume is not None:
+        arrays = {k_: jnp.asarray(v) for k_, v in resume.arrays.items()}
+        assign = jnp.asarray(resume.assign)
+        cursors = (resume.level_start, resume.level_end, resume.next_free,
+                   resume.depth)
+    else:
+        arrays = _init_arrays(max_nodes)
+        assign = jnp.zeros((m,), dtype=jnp.int32)
+        cursors = (0, 1, 1, 1)
+
+    kw = dict(n_bins=b, heuristic=config.heuristic, task=config.task,
+              min_samples_split=config.min_samples_split,
+              min_samples_leaf=config.min_samples_leaf,
+              max_depth=config.max_depth, max_nodes=max_nodes,
+              hist_backend=config.hist_backend,
+              select_backend=config.select_backend,
+              n_label_bins=n_label_bins)
+
+    def step(arrays, assign, cs, cn, next_free, depth, num_slots):
+        return _chunk_step(bins, stats, lbins, yv, assign, arrays, n_num,
+                           n_cat, jnp.int32(cs), jnp.int32(cn),
+                           jnp.int32(next_free), jnp.int32(depth),
+                           num_slots=num_slots, **kw)
+
+    def route(assign, arrays, start, end):
+        return _route_step(bins, assign, arrays, n_num, jnp.int32(start),
+                           jnp.int32(end))
+
+    arrays, n_nodes = _grow(step, route, arrays, assign, s_cap, max_nodes,
+                            level_callback, cursors)
+    return Tree(n_nodes=n_nodes, **arrays)

@@ -1,0 +1,110 @@
+"""Training-Only-Once Tuning (paper section 3).
+
+Train ONE full tree; then score the entire (max_depth x min_samples_split)
+grid against the validation set without retraining.  The trick: record each
+validation example's root->leaf path once.  Along a path the node counts are
+non-increasing, so for any ``min_split`` the stopping index is a prefix
+count (``sum(count >= min_split)``) and for any ``max_depth`` it is a clamp.
+Every grid cell then costs O(1) per example.
+
+The paper's protocol (section 4): max_depth swept 1..full tree depth;
+min_split swept 0..4% of the training set in steps of 0.02% (200 values).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predict import paths, predict_bins
+from repro.core.tree import Tree
+
+__all__ = ["ToolGrid", "toot_grid", "tune", "prune_stats", "TuneResult"]
+
+
+class ToolGrid(NamedTuple):
+    dmax: np.ndarray      # [Nd]
+    smin: np.ndarray      # [Ns]
+    metric: np.ndarray    # [Nd, Ns] accuracy (cls) or -RMSE (reg): higher=better
+
+
+@dataclasses.dataclass
+class TuneResult:
+    best_dmax: int
+    best_smin: int
+    best_metric: float
+    grid: ToolGrid
+    n_configs: int
+
+
+@functools.partial(jax.jit, static_argnames=("classification",))
+def _grid_metric(lab, cnt, y, smin, dmax, *, classification: bool = True):
+    """lab/cnt: [M, T] path label/count; smin: [Ns]; dmax: [Nd]."""
+    # stopping index per (example, smin): counts are non-increasing
+    ge = cnt[:, :, None] >= smin[None, None, :]            # [M,T,Ns]
+    smin_cut = ge.sum(axis=1).astype(jnp.int32)            # [M,Ns] first idx below
+    t_len = lab.shape[1]
+
+    def per_dmax(d):
+        idx = jnp.clip(jnp.minimum(smin_cut, d - 1), 0, t_len - 1)  # [M,Ns]
+        pred = jnp.take_along_axis(lab, idx, axis=1)                # [M,Ns]
+        if classification:
+            return (pred == y[:, None]).mean(axis=0)
+        return -jnp.sqrt(((pred - y[:, None]) ** 2).mean(axis=0))
+
+    return jax.vmap(per_dmax)(dmax)                        # [Nd,Ns]
+
+
+def toot_grid(tree: Tree, val_bins, y_val, n_num, *,
+              dmax_values=None, smin_values=None, train_size: int | None = None,
+              classification: bool = True) -> ToolGrid:
+    """Score the full hyper-parameter grid with one path pass."""
+    t = tree.max_tree_depth
+    if dmax_values is None:
+        dmax_values = np.arange(1, t + 1, dtype=np.int32)
+    if smin_values is None:
+        # paper: 0 .. 4% of train set, step 0.02%  (200 values)
+        n = train_size if train_size is not None else int(tree.count[0])
+        smin_values = np.round(np.linspace(0, 0.04 * n, 201)).astype(np.int32)
+    nodes = paths(tree, val_bins, n_num)                   # [M,T]
+    lab = tree.label[nodes]
+    cnt = tree.count[nodes]
+    yv = jnp.asarray(y_val, dtype=jnp.float32)
+    metric = _grid_metric(lab, cnt, yv, jnp.asarray(smin_values),
+                          jnp.asarray(dmax_values, dtype=jnp.int32),
+                          classification=classification)
+    return ToolGrid(np.asarray(dmax_values), np.asarray(smin_values),
+                    np.asarray(metric))
+
+
+def tune(tree: Tree, val_bins, y_val, n_num, *, train_size=None,
+         classification=True, dmax_values=None, smin_values=None) -> TuneResult:
+    grid = toot_grid(tree, val_bins, y_val, n_num, train_size=train_size,
+                     classification=classification, dmax_values=dmax_values,
+                     smin_values=smin_values)
+    i, j = np.unravel_index(np.argmax(grid.metric), grid.metric.shape)
+    return TuneResult(int(grid.dmax[i]), int(grid.smin[j]),
+                      float(grid.metric[i, j]), grid,
+                      n_configs=grid.metric.size)
+
+
+def prune_stats(tree: Tree, dmax: int, smin: int):
+    """Node count / depth of the pruned tree (reachable under the tuned
+    hyper-parameters), computed host-side by BFS — reporting parity with the
+    paper's 'tuned tree' columns."""
+    feat = np.asarray(tree.feat); left = np.asarray(tree.left)
+    right = np.asarray(tree.right); leaf = np.asarray(tree.leaf)
+    count = np.asarray(tree.count); depth = np.asarray(tree.depth)
+    n, max_d, stack = 0, 0, [0]
+    while stack:
+        u = stack.pop()
+        n += 1
+        max_d = max(max_d, int(depth[u]))
+        stops = leaf[u] or left[u] < 0 or count[u] < smin or depth[u] >= dmax
+        if not stops:
+            stack.append(int(left[u])); stack.append(int(right[u]))
+    return n, max_d

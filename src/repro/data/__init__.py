@@ -1,0 +1,4 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_classification, make_regression, make_hybrid_table, train_val_test_split,
+    DATASET_ZOO, make_dataset,
+)

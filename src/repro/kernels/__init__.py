@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for Superfast Selection's two hot spots:
+
+  histogram.py   one-hot MXU matmul histogram (no TPU atomics -> matmul)
+  split_scan.py  fused prefix-sum -> heuristic -> argmax selection scan
+
+Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
+(ref.py); tests/test_kernels.py sweeps shapes/dtypes against the oracles in
+interpret mode.
+"""
+from repro.kernels import ops, ref  # noqa: F401

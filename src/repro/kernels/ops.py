@@ -1,0 +1,37 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the kernel body is
+executed in Python on CPU for correctness); on TPU set
+``repro.kernels.ops.INTERPRET = False`` (the launcher does this when
+``jax.default_backend() == 'tpu'``).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.histogram import histogram_pallas
+from repro.kernels.split_scan import split_scan_pallas
+
+__all__ = ["histogram", "split_scan", "INTERPRET"]
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def histogram(bins, stats, slot, *, num_slots, n_bins, slot_chunk=None):
+    """H[S,K,B,C] via the one-hot-MXU Pallas kernel (see kernels/histogram.py).
+
+    slot_chunk defaults so the per-program onehot tile (Mt x Sc*B f32) stays
+    within a ~4 MiB VMEM budget.
+    """
+    if slot_chunk is None:
+        budget_lanes = (4 << 20) // (4 * 512)               # Mt=512 rows
+        slot_chunk = max(1, min(num_slots, budget_lanes // max(1, n_bins)))
+    return histogram_pallas(bins, stats, slot, num_slots=num_slots,
+                            n_bins=n_bins, slot_chunk=slot_chunk,
+                            interpret=INTERPRET)
+
+
+def split_scan(hist, n_num, n_cat, *, heuristic="info_gain", min_leaf=1):
+    """Fused selection scan (see kernels/split_scan.py)."""
+    return split_scan_pallas(hist, n_num, n_cat, heuristic=heuristic,
+                             min_leaf=min_leaf, interpret=INTERPRET)

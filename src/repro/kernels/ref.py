@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
+
+These are deliberately straight-line jnp with no tiling so they serve as the
+ground truth for tests/test_kernels.py shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heuristics as H
+from repro.core.split import NEG_INF
+
+__all__ = ["histogram_ref", "split_scan_ref"]
+
+
+def histogram_ref(bins, stats, slot, *, num_slots, n_bins):
+    """H[S, K, B, C] += stats[i] at (slot[i], k, bins[i,k]) — scatter oracle."""
+    m, k = bins.shape
+    c = stats.shape[-1]
+    idx = jnp.where(slot[:, None] < 0, num_slots * n_bins,
+                    slot[:, None] * n_bins + bins)          # [M,K]
+    oh = jax.nn.one_hot(idx, num_slots * n_bins, dtype=jnp.float32)
+    h = jnp.einsum("mks,mc->ksc", oh, stats)
+    return h.reshape(k, num_slots, n_bins, c).transpose(1, 0, 2, 3)
+
+
+def split_scan_ref(hist, n_num, n_cat, *, heuristic="info_gain", min_leaf=1):
+    """Fused prefix-sum -> heuristic -> per-(slot,feature) argmax oracle.
+
+    hist: [S,K,B,C].  Returns (score[S,K], bin[S,K], op[S,K]) — the best
+    candidate per (node-slot, feature); the cross-feature argmax is a trivial
+    postlude the kernel leaves to the caller.
+    """
+    h_fn = H.get(heuristic)
+    s, k, b, c = hist.shape
+    bin_ids = jnp.arange(b, dtype=jnp.int32)
+    is_num = bin_ids[None, :] < n_num[:, None]
+    is_cat = (bin_ids[None, :] >= n_num[:, None]) & (
+        bin_ids[None, :] < (n_num + n_cat)[:, None])
+
+    tot = hist.sum(axis=2, keepdims=True)
+    num_hist = hist * is_num[None, :, :, None]
+    prefix = jnp.cumsum(num_hist, axis=2)
+    tot_num = prefix[:, :, -1:, :]
+
+    pos = jnp.stack([prefix, tot_num - prefix, hist])       # [3,S,K,B,C]
+    neg = tot[None] - pos
+    moment = heuristic == "sse"
+    cnt_p = pos[..., 0] if moment else pos.sum(-1)
+    cnt_n = neg[..., 0] if moment else neg.sum(-1)
+    score = h_fn(pos, neg)
+    valid = jnp.stack([is_num, is_num, is_cat])[:, None]    # [3,1,K,B]
+    ok = valid & (cnt_p >= min_leaf) & (cnt_n >= min_leaf)
+    score = jnp.where(ok, score, NEG_INF)                   # [3,S,K,B]
+
+    flat = score.transpose(1, 2, 0, 3).reshape(s, k, 3 * b)
+    best = jnp.argmax(flat, axis=-1)
+    best_score = jnp.take_along_axis(flat, best[..., None], axis=-1)[..., 0]
+    return best_score, (best % b).astype(jnp.int32), (best // b).astype(jnp.int32)

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out experiments/dryrun.json
+
+Per cell: .lower().compile() must succeed; we record memory_analysis(),
+cost_analysis(), per-kind collective bytes, and the scan-depth-corrected
+roofline terms (launch/analysis.py).  Skipped cells (encoder decode,
+quadratic 500k) are emitted as SKIP rows, never silently dropped.
+
+The two leading lines set 512 placeholder CPU devices BEFORE any jax import
+(device count locks on first init); nothing else in the repo sets this flag.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch import analysis, specs
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.models import model as M
+from repro.models.sharding import set_activation_axes
+from repro.serve import make_serve_step
+from repro.train import make_train_step
+
+
+def _lower_cell(cfg, shape_id, mesh, *, extra_cfg=None):
+    """Lower the cell's step; returns (lowered, n_groups)."""
+    axes = mesh_axes(mesh)
+    set_activation_axes(axes, mesh)
+    seq, batch_size, kind = configs.SHAPES[shape_id]
+    ins = specs.input_specs(cfg, shape_id)
+
+    with mesh:
+        if kind == "train":
+            state_struct = specs.state_structs(cfg)
+            state_sh = specs.state_shardings(cfg, state_struct, mesh, axes)
+            batch_sh = specs.batch_shardings(ins, mesh, axes)
+            step = make_train_step(cfg, **(extra_cfg or {}))
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None)).lower(
+                                  state_struct, ins)
+        elif kind == "prefill":
+            state_struct = specs.state_structs(cfg)
+            param_sh = specs.state_shardings(cfg, state_struct, mesh,
+                                             axes).params
+            batch_sh = specs.batch_shardings(ins, mesh, axes)
+            fwd = lambda p, b: M.forward(p, cfg, b)
+            lowered = jax.jit(fwd, in_shardings=(param_sh, batch_sh)).lower(
+                state_struct.params, ins)
+        else:  # decode
+            state_struct = specs.state_structs(cfg)
+            param_sh = specs.state_shardings(cfg, state_struct, mesh,
+                                             axes).params
+            dec_sh = specs.decode_shardings(cfg, ins, mesh, axes)
+            step = make_serve_step(cfg)
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, dec_sh["tokens"], dec_sh["cache"]),
+                out_shardings=(dec_sh["tokens"], None, dec_sh["cache"]),
+            ).lower(state_struct.params, ins["tokens"], ins["cache"])
+    return lowered
+
+
+def _body_variant(cfg, n_patterns: int):
+    """Same config at n_patterns x pattern depth, UNROLLED (for the
+    scan-once cost correction)."""
+    return dataclasses.replace(
+        cfg, n_layers=n_patterns * len(cfg.pattern), scan_layers=False)
+
+
+def run_cell(arch, shape_id, mesh_name, mesh, *, correct=True, verbose=True):
+    cfg = configs.get(arch)
+    skip = configs.shape_skip_reason(cfg, shape_id)
+    row = {"arch": arch, "shape": shape_id, "mesh": mesh_name,
+           "chips": mesh.devices.size}
+    if skip:
+        row["status"] = f"SKIP({skip})"
+        return row
+    t0 = time.time()
+    try:
+        lowered = _lower_cell(cfg, shape_id, mesh)
+        compiled = lowered.compile()
+        raw = analysis.analyze(compiled, chips=mesh.devices.size)
+        row["lower_compile_s"] = round(time.time() - t0, 1)
+        n_groups = cfg.n_groups if cfg.scan_layers else 1
+        if correct and cfg.scan_layers and n_groups > 1:
+            a1 = analysis.analyze(
+                _lower_cell(_body_variant(cfg, 1), shape_id, mesh).compile(),
+                chips=mesh.devices.size)
+            a2 = analysis.analyze(
+                _lower_cell(_body_variant(cfg, 2), shape_id, mesh).compile(),
+                chips=mesh.devices.size)
+            res = analysis.corrected(raw, a1, a2, n_groups)
+        else:
+            res = raw
+        seq, bsz, kind = configs.SHAPES[shape_id]
+        tokens = bsz * (1 if kind == "decode" else seq)
+        mf = analysis.model_flops(cfg, kind, tokens)
+        res["model_flops_global"] = mf
+        res["hlo_flops_global"] = res["flops"] * mesh.devices.size
+        res["model_vs_hlo"] = (mf / res["hlo_flops_global"]
+                               if res["hlo_flops_global"] else None)
+        row.update(res)
+        row["status"] = "OK"
+    except Exception as e:
+        row["status"] = f"FAIL({type(e).__name__}: {e})"
+        row["traceback"] = traceback.format_exc()[-2000:]
+    if verbose:
+        msg = row["status"]
+        if row["status"] == "OK":
+            msg += (f" t={row['lower_compile_s']}s"
+                    f" bottleneck={row['bottleneck']}"
+                    f" step>={row['step_lower_bound_s']:.3f}s"
+                    f" model/hlo={row['model_vs_hlo'] and round(row['model_vs_hlo'],3)}")
+        print(f"[{mesh_name}] {arch} x {shape_id}: {msg}", flush=True)
+    return row
+
+
+def run_udt_cell(mesh_name, mesh, *, m_examples=1 << 20, k_feats=48,
+                 n_bins=256, n_classes=24, num_slots=256, verbose=True):
+    """The paper-technique cell: one distributed UDT level chunk."""
+    import jax.numpy as jnp
+    from repro.core.distributed import DistConfig, make_sharded_step
+    axes = mesh_axes(mesh)
+    dist = DistConfig(data_axes=axes.data, model_axis="model")
+    kw = dict(n_bins=n_bins, heuristic="info_gain", task="classification",
+              min_samples_split=2, min_samples_leaf=1, max_depth=64,
+              max_nodes=1 << 20, hist_backend="segment",
+              select_backend="jnp", n_label_bins=1)
+    row = {"arch": "udt_paper", "shape": f"m{m_examples}_k{k_feats}",
+           "mesh": mesh_name, "chips": mesh.devices.size}
+    t0 = time.time()
+    try:
+        step = make_sharded_step(mesh, dist, kw, m_examples, k_feats,
+                                 n_classes, 1 << 20, num_slots)
+        sds = jax.ShapeDtypeStruct
+        arrays = {k: sds((1 << 20,), jnp.int32)
+                  for k in ("feat", "op", "tbin", "count", "depth", "left",
+                            "right")}
+        arrays["score"] = sds((1 << 20,), jnp.float32)
+        arrays["label"] = sds((1 << 20,), jnp.float32)
+        arrays["leaf"] = sds((1 << 20,), jnp.bool_)
+        lowered = step.lower(
+            sds((m_examples, k_feats), jnp.int32),          # bins
+            sds((m_examples, n_classes), jnp.float32),      # stats
+            sds((m_examples,), jnp.int32),                  # lbins
+            sds((m_examples,), jnp.float32),                # y
+            sds((m_examples,), jnp.int32),                  # assign
+            arrays,
+            sds((k_feats,), jnp.int32), sds((k_feats,), jnp.int32),
+            sds((), jnp.int32), sds((), jnp.int32),
+            sds((), jnp.int32), sds((), jnp.int32))
+        compiled = lowered.compile()
+        row.update(analysis.analyze(compiled, chips=mesh.devices.size))
+        row["lower_compile_s"] = round(time.time() - t0, 1)
+        row["status"] = "OK"
+    except Exception as e:
+        row["status"] = f"FAIL({type(e).__name__}: {e})"
+        row["traceback"] = traceback.format_exc()[-2000:]
+    if verbose:
+        print(f"[{mesh_name}] udt_paper: {row['status']}", flush=True)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--no-correct", action="store_true")
+    ap.add_argument("--skip-udt", action="store_true")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run needs the 512-device flag"
+    archs = configs.ARCH_IDS if args.arch == "all" else [
+        configs.ALIASES.get(args.arch, args.arch)]
+    shapes = list(configs.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2x16x16", make_production_mesh(multi_pod=True)))
+
+    rows = []
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            for shape_id in shapes:
+                rows.append(run_cell(arch, shape_id, mesh_name, mesh,
+                                     correct=not args.no_correct))
+        if not args.skip_udt:
+            rows.append(run_udt_cell(mesh_name, mesh))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "OK" for r in rows)
+    n_skip = sum(r["status"].startswith("SKIP") for r in rows)
+    n_fail = len(rows) - n_ok - n_skip
+    print(f"\n{n_ok} OK / {n_skip} SKIP / {n_fail} FAIL -> {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state (the brief's requirement): device count is
+locked on first jax init, and only dryrun.py sets the 512-device flag.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.sharding import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> MeshAxes:
+    """Logical-axis view of a mesh for the sharding rules."""
+    names = mesh.axis_names
+    data = tuple(n for n in names if n != "model")
+    return MeshAxes(data=data, model="model",
+                    sizes={n: mesh.shape[n] for n in names})
+
+
+def make_smoke_mesh():
+    """Whatever devices exist locally (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,89 @@
+"""ShapeDtypeStruct stand-ins + NamedSharding assignment for every cell.
+
+``input_specs(cfg, shape_id)`` returns abstract inputs for the step that the
+cell lowers (train/prefill -> batch; decode -> (token, cache)); nothing is
+ever allocated.  ``state_structs`` gives the abstract TrainState.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.sharding import MeshAxes, cache_specs, param_specs
+from repro.train import init_train_state
+from repro.train.optimizer import adamw_init
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_id: str):
+    """Abstract inputs for the cell's step.
+
+    train/prefill: batch dict.  decode: (tokens [B,1], cache at seq_len).
+    [audio]/[vlm]: precomputed frame/patch embeddings per the brief.
+    """
+    seq, batch, kind = configs.SHAPES[shape_id]
+    if kind in ("train", "prefill"):
+        out = {}
+        if cfg.frontend == "audio_frames":
+            out["frames"] = _sds((batch, seq, cfg.frontend_dim), jnp.bfloat16)
+            if kind == "train":
+                out["labels"] = _sds((batch, seq), jnp.int32)
+            return out
+        if cfg.frontend == "vision_patches":
+            out["patches"] = _sds((batch, cfg.n_prefix, cfg.frontend_dim),
+                                  jnp.bfloat16)
+            seq = seq - cfg.n_prefix          # total positions = shape seq
+        out["tokens"] = _sds((batch, seq), jnp.int32)
+        if kind == "train":
+            out["labels"] = _sds((batch, seq), jnp.int32)
+        return out
+    # decode: one new token against a cache of seq_len
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, batch, seq))
+    return {"tokens": _sds((batch, 1), jnp.int32), "cache": cache}
+
+
+def batch_shardings(tree, mesh, axes: MeshAxes):
+    """Batch-dim sharding over the data axes (replicated if indivisible)."""
+    dsz = axes.dsize()
+
+    def spec(leaf):
+        if not leaf.shape:
+            return P()
+        ok = leaf.shape[0] % dsz == 0
+        return P(axes.data if ok else None,
+                 *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(lambda l: NamedSharding(mesh, spec(l)), tree)
+
+
+def state_structs(cfg: ModelConfig):
+    """Abstract TrainState via eval_shape (giants never materialise)."""
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg), jax.random.key(0))
+
+
+def state_shardings(cfg: ModelConfig, state_struct, mesh, axes: MeshAxes):
+    pspec = param_specs(cfg, state_struct.params, axes)
+    to_sh = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+    opt_spec = {
+        "m": pspec, "v": pspec,
+        "step": P(),
+    }
+    return type(state_struct)(to_sh(pspec), to_sh(opt_spec))
+
+
+def decode_shardings(cfg: ModelConfig, ins, mesh, axes: MeshAxes):
+    b = ins["tokens"].shape[0]
+    cspec = cache_specs(cfg, ins["cache"], axes, b)
+    tok = P(axes.data if b % axes.dsize() == 0 else None, None)
+    return {
+        "tokens": NamedSharding(mesh, tok),
+        "cache": jax.tree.map(lambda s: NamedSharding(mesh, s), cspec),
+    }

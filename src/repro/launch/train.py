@@ -1,0 +1,134 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+Runs a real training loop (synthetic LM data on this container) with
+checkpoint/restart: kill it at any step and rerun the same command — it
+resumes from the latest checkpoint.  On hardware the same driver runs the
+full config on the production mesh (--mesh prod).  ``--arch udt`` trains
+the paper's decision tree instead (shared launcher, per DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import (latest_step, restore_train_state,
+                              save_train_state)
+from repro.launch.mesh import make_smoke_mesh, make_production_mesh, mesh_axes
+from repro.models.sharding import set_activation_axes
+from repro.train import init_train_state, make_train_step
+
+
+def synthetic_lm_batch(cfg, batch, seq, step, *, seed=17):
+    """Deterministic synthetic token stream (markov-ish so loss can drop);
+    keyed by step so checkpoint-resume continues the same stream."""
+    rng = np.random.default_rng(seed + step)
+    v = min(cfg.vocab, 4096)
+    base = rng.integers(0, v, size=(batch, seq + 1), dtype=np.int64)
+    # inject learnable structure: token_{t+1} = (token_t * 31 + 7) % v on 60%
+    copy = rng.uniform(size=(batch, seq)) < 0.6
+    nxt = (base[:, :-1] * 31 + 7) % v
+    base[:, 1:][copy] = nxt[copy]
+    out = {"tokens": jnp.asarray(base[:, :-1], jnp.int32),
+           "labels": jnp.asarray(base[:, 1:], jnp.int32)}
+    if cfg.frontend == "audio_frames":
+        out = {"frames": jax.random.normal(jax.random.key(step),
+                                           (batch, seq, cfg.frontend_dim)),
+               "labels": out["labels"] % cfg.vocab}
+    elif cfg.frontend == "vision_patches":
+        out["patches"] = jax.random.normal(
+            jax.random.key(step), (batch, cfg.n_prefix, cfg.frontend_dim))
+    return out
+
+
+def train_udt(args):
+    from repro.core import fit_bins, build_tree, TreeConfig, predict_bins, tune
+    from repro.core import transform
+    from repro.data import make_dataset, train_val_test_split
+    cols, y, c = make_dataset(args.dataset, scale=args.scale)
+    (tr_c, tr_y), (va_c, va_y), (te_c, te_y) = train_val_test_split(cols, y)
+    table = fit_bins(tr_c, max_num_bins=args.bins)
+    cfg = configs.get_smoke("udt_paper") if args.smoke else configs.get("udt_paper")
+    t0 = time.time()
+    cb = None
+    if args.ckpt_dir:
+        from repro.checkpoint import TreeCheckpointer
+        cb = TreeCheckpointer(args.ckpt_dir)
+    tree = build_tree(table, tr_y, cfg, n_classes=c, level_callback=cb)
+    print(f"train: {tree.n_nodes} nodes depth {tree.max_tree_depth} "
+          f"in {time.time()-t0:.2f}s")
+    t0 = time.time()
+    res = tune(tree, transform(va_c, table), va_y, table.n_num,
+               train_size=len(tr_y), classification=c is not None)
+    print(f"tune: {res.n_configs} configs in {time.time()-t0:.3f}s "
+          f"-> dmax={res.best_dmax} smin={res.best_smin}")
+    pred = np.asarray(predict_bins(tree, transform(te_c, table), table.n_num,
+                                   max_depth=res.best_dmax,
+                                   min_samples_split=res.best_smin))
+    print(f"test acc: {(pred == te_y).mean():.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="local", choices=["local", "prod"])
+    # udt options
+    ap.add_argument("--dataset", default="churn_modeling")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--bins", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.arch == "udt":
+        return train_udt(args)
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get(args.arch))
+    mesh = (make_production_mesh() if args.mesh == "prod"
+            else make_smoke_mesh())
+    set_activation_axes(mesh_axes(mesh), mesh)
+
+    state = init_train_state(jax.random.key(0), cfg)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        state, manifest = restore_train_state(state, args.ckpt_dir)
+        start = manifest["extra"]["data_offset"]
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, lr=args.lr,
+                                      microbatch=args.microbatch))
+    t0 = time.time()
+    with mesh:
+        for step in range(start, args.steps):
+            batch = synthetic_lm_batch(cfg, args.batch, args.seq, step)
+            state, metrics = step_fn(state, batch)
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"({(time.time()-t0):.1f}s)", flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save_train_state(state, args.ckpt_dir, step + 1,
+                                 data_offset=step + 1)
+    if args.ckpt_dir:
+        save_train_state(state, args.ckpt_dir, args.steps,
+                         data_offset=args.steps)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Core transformer layers, raw JAX (no flax): pure functions over param
+pytrees.  Every matmul is an einsum with named subscripts; sharding is
+applied at the param level (models/sharding.py) and via activation
+constraints in model.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain_act, heads_shardable
+
+Init = jax.nn.initializers
+
+
+def truncated_normal(key, shape, dtype, scale):
+    return Init.truncated_normal(stddev=scale)(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / embeddings / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table, softcap=0.0):
+    logits = jnp.einsum("btd,vd->btv", x, table)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def rope(x, positions, theta=10_000.0):
+    """x: [..., T, n, head_dim]; positions: [..., T]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq      # [...,T,half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional local window / non-causal / prefix bidirectional)
+# ---------------------------------------------------------------------------
+
+def attention_mask(q_pos, kv_pos, *, causal=True, local_window=0, n_prefix=0):
+    """[..., Tq, Tk] boolean mask.  n_prefix: bidirectional prefix (vlm)."""
+    q = q_pos[..., :, None]
+    k = kv_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), dtype=bool)
+    if causal:
+        cm = k <= q
+        if n_prefix:
+            cm = cm | ((k < n_prefix) & (q < n_prefix))
+        m = m & cm
+    if local_window:
+        m = m & (k > q - local_window)
+    return m
+
+
+def gqa_attention(q, k, v, mask):
+    """q: [B,T,H,hd]; k/v: [B,S,Kv,hd]; mask: [B,T,S] boolean."""
+    b, t, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    q = q.reshape(b, t, kv, g, hd)
+    logits = jnp.einsum("btkgh,bskh->bkgts", q, k).astype(jnp.float32)
+    logits = logits / np.sqrt(hd)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)   # [B,1,1,T,S]
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", w, v)
+    return out.reshape(b, t, h, hd)
+
+
+def attn_block(p, x, positions, cfg, kv_cache=None, cache_index=None):
+    """Self-attention with GQA + RoPE.  If kv_cache=(k,v) is given, new keys
+    are written at cache_index and attention runs over the cache (decode).
+    Returns (out, new_cache)."""
+    b, t, d = x.shape
+    q = jnp.einsum("btd,dnh->btnh", x, p["wq"])
+    k = jnp.einsum("btd,dnh->btnh", x, p["wk"])
+    v = jnp.einsum("btd,dnh->btnh", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        if not heads_shardable(cfg.n_kv):
+            # heads don't divide the model axis (e.g. smollm's 15H/5KV on a
+            # 16-way mesh): shard QUERY POSITIONS over 'model' instead, so
+            # attention compute/score-memory is 1/msize per device instead
+            # of fully replicated (sequence parallelism fallback)
+            q = constrain_act(q, "btnh_seq")
+        mask = attention_mask(positions, positions, causal=cfg.causal,
+                              local_window=cfg.local_window,
+                              n_prefix=cfg.n_prefix)
+        out = gqa_attention(q, k, v, mask)
+        if not heads_shardable(cfg.n_kv):
+            out = constrain_act(out, "btnh_seq")
+        new_cache = None
+    else:
+        ck, cv = kv_cache                       # [B, S, Kv, hd]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
+        s = ck.shape[1]
+        kv_pos = jnp.arange(s, dtype=jnp.int32)[None]
+        valid = kv_pos <= positions[:, -1:]
+        mask = attention_mask(positions, kv_pos, causal=cfg.causal,
+                              local_window=cfg.local_window,
+                              n_prefix=cfg.n_prefix) & valid[:, None, :]
+        out = gqa_attention(q, ck, cv, mask)
+        new_cache = (ck, cv)
+    out = jnp.einsum("btnh,nhd->btd", out, p["wo"])
+    return out, new_cache
+
+
+def init_attn(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / np.sqrt(d)
+    p = {
+        "wq": truncated_normal(ks[0], (d, h, hd), dtype, sc),
+        "wk": truncated_normal(ks[1], (d, kv, hd), dtype, sc),
+        "wv": truncated_normal(ks[2], (d, kv, hd), dtype, sc),
+        "wo": truncated_normal(ks[3], (h, hd, d), dtype, 1.0 / np.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# gated feed-forward (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def ffn_block(p, x, act="silu"):
+    gate = jnp.einsum("btd,df->btf", x, p["w_gate"])
+    up = jnp.einsum("btd,df->btf", x, p["w_up"])
+    a = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+    return jnp.einsum("btf,fd->btd", a * up, p["w_down"])
+
+
+def init_ffn(key, d, f, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": truncated_normal(ks[0], (d, f), dtype, 1.0 / np.sqrt(d)),
+        "w_up": truncated_normal(ks[1], (d, f), dtype, 1.0 / np.sqrt(d)),
+        "w_down": truncated_normal(ks[2], (f, d), dtype, 1.0 / np.sqrt(f)),
+    }

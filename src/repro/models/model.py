@@ -1,0 +1,318 @@
+"""Composable LM: pattern-grouped blocks scanned over depth.
+
+Layers are stacked per PATTERN POSITION and scanned over groups, so the HLO
+is flat in depth (a 48-layer model lowers the same graph size as a 2-layer
+one — required for 512-device compilation).  Remainder layers (n_layers %
+len(pattern)) are unrolled.
+
+Block kinds: attn (GQA+RoPE, optional local window / bidirectional prefix),
+rglru (Griffin recurrent block), mlstm / slstm (xLSTM).  Each pattern
+position optionally carries an FFN (dense gated or MoE).
+
+Modality frontends are STUBS per the brief: hubert consumes precomputed
+frame embeddings, paligemma consumes precomputed patch embeddings; both are
+projected by a single learned matrix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import xlstm as XL
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain_act
+
+BLOCK_APPLY = {
+    "attn": L.attn_block,
+    "rglru": RG.rglru_block,
+    "mlstm": XL.mlstm_block,
+    "slstm": XL.slstm_block,
+}
+BLOCK_INIT = {
+    "attn": L.init_attn,
+    "rglru": RG.init_rglru,
+    "mlstm": XL.init_mlstm,
+    "slstm": XL.init_slstm,
+}
+
+
+def _dt(name):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, pos: int, dtype):
+    kind = cfg.pattern[pos]
+    k1, k2 = jax.random.split(key)
+    p = {"kind_params": BLOCK_INIT[kind](k1, cfg, dtype),
+         "norm1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if cfg.d_ff > 0:
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.is_moe_layer(pos):   # pattern-aligned (checked in init_params)
+            p["moe"] = MOE.init_moe(k2, cfg, dtype)
+        else:
+            p["ffn"] = L.init_ffn(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    """Returns the parameter pytree (use under jax.eval_shape for abstract
+    init — the dry-run never materialises the giants)."""
+    for l in range(cfg.n_layers):
+        assert cfg.is_moe_layer(l) == cfg.is_moe_layer(l % len(cfg.pattern)), \
+            "MoE periodicity must align with the layer pattern"
+    dtype = _dt(cfg.param_dtype)
+    keys = jax.random.split(key, 4 + len(cfg.pattern) + cfg.n_remainder)
+    params: dict = {
+        "embed": L.truncated_normal(keys[0], (cfg.vocab, cfg.d_model),
+                                    dtype, cfg.d_model ** -0.5),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if cfg.frontend != "none":
+        params["frontend_proj"] = L.truncated_normal(
+            keys[1], (cfg.frontend_dim, cfg.d_model), dtype,
+            1.0 / np.sqrt(cfg.frontend_dim))
+    if not cfg.causal:            # encoder: untied classification head
+        params["head"] = L.truncated_normal(
+            keys[2], (cfg.d_model, cfg.vocab), dtype, 1.0 / np.sqrt(cfg.d_model))
+
+    def stack_init(pos):
+        def one(k):
+            return _init_layer(k, cfg, pos, dtype)
+        ks = jax.random.split(keys[4 + pos], cfg.n_groups)
+        return jax.vmap(one)(ks)
+
+    params["groups"] = [stack_init(p) for p in range(len(cfg.pattern))]
+    params["remainder"] = [
+        _init_layer(keys[4 + len(cfg.pattern) + i], cfg, i, dtype)
+        for i in range(cfg.n_remainder)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, pos: int, p, x, positions,
+                 state=None, cache_index=None, decode=False):
+    kind = cfg.pattern[pos]
+    dt = x.dtype                    # keep the residual stream in cfg.dtype
+    h = L.rmsnorm(x, p["norm1"])
+    out, new_state = BLOCK_APPLY[kind](p["kind_params"], h, positions, cfg,
+                                       state, cache_index)
+    x = (x + out).astype(dt)
+    if cfg.d_ff > 0:
+        h = L.rmsnorm(x, p["norm2"])
+        if "moe" in p:
+            x = (x + MOE.moe_block(p["moe"], h, cfg)).astype(dt)
+        else:
+            x = (x + L.ffn_block(p["ffn"], h, cfg.act)).astype(dt)
+    return x, new_state
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    dtype = _dt(cfg.dtype)
+    parts = []
+    if cfg.frontend == "audio_frames":
+        parts.append(jnp.einsum("btf,fd->btd", batch["frames"].astype(dtype),
+                                params["frontend_proj"].astype(dtype)))
+    elif cfg.frontend == "vision_patches":
+        parts.append(jnp.einsum("bpf,fd->bpd", batch["patches"].astype(dtype),
+                                params["frontend_proj"].astype(dtype)))
+    if "tokens" in batch and cfg.frontend != "audio_frames":
+        emb = L.embed(batch["tokens"], params["embed"]).astype(dtype)
+        parts.append(emb)
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    if cfg.name.startswith(("gemma", "recurrentgemma", "paligemma")):
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return x.astype(dtype)
+
+
+def forward(params, cfg: ModelConfig, batch, *, return_states=False,
+            return_hidden=False):
+    """Full-sequence forward (training / prefill).  Returns logits
+    [B, T, vocab] (and per-layer states if return_states); with
+    return_hidden, the pre-unembed hidden states [B, T, D] instead (the
+    chunked-loss path computes logits in vocab-bounded chunks)."""
+    x = constrain_act(_embed_inputs(params, cfg, batch), "btd")
+    b, t, _ = x.shape
+    positions = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+
+    def group_body(x, gp):
+        states = []
+        for pos in range(len(cfg.pattern)):
+            x, st = _apply_layer(cfg, pos, gp[pos], x, positions)
+            states.append(st)
+        return constrain_act(x, "btd"), tuple(states) if return_states else None
+
+    body = group_body
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(group_body, policy=policy)
+    if cfg.scan_layers and cfg.n_groups > 0:
+        x, states = jax.lax.scan(lambda c, gp: body(c, gp), x,
+                                 params["groups"])
+    else:
+        states = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            x, st = body(x, gp)
+            states.append(st)
+    rem_states = []
+    for i, p in enumerate(params["remainder"]):
+        x, st = _apply_layer(cfg, i, p, x, positions)
+        rem_states.append(st)
+
+    x = L.rmsnorm(x, params["final_norm"])
+    if return_hidden:
+        return x
+    if not cfg.causal:
+        logits = jnp.einsum("btd,dv->btv", x, params["head"].astype(x.dtype))
+    else:
+        logits = L.unembed(x, params["embed"].astype(x.dtype),
+                           cfg.logit_softcap)
+    logits = constrain_act(logits, "btv")
+    if return_states:
+        return logits, (states, rem_states)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode (serve): per-layer recurrent/KV state
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    """Allocate decode state for every layer (stacked per pattern position).
+
+    attn -> {k, v, pos} ring-buffered at min(max_len, local_window);
+    rglru -> (conv_tail, h); mlstm -> (C, n); slstm -> (c, n).
+    """
+    b = batch_size
+    d = cfg.d_model
+
+    def one(kind):
+        if kind == "attn":
+            s = min(max_len, cfg.local_window) if cfg.local_window else max_len
+            return {
+                "k": jnp.zeros((b, s, cfg.n_kv, cfg.head_dim), jnp.bfloat16),
+                "v": jnp.zeros((b, s, cfg.n_kv, cfg.head_dim), jnp.bfloat16),
+                "pos": jnp.full((b, s), -1, jnp.int32),
+            }
+        if kind == "rglru":
+            return (jnp.zeros((b, 3, d), jnp.float32),
+                    jnp.zeros((b, d), jnp.float32))
+        if kind == "mlstm":
+            di = XL.EXPANSION * d
+            hd = di // cfg.n_heads
+            return (jnp.zeros((b, cfg.n_heads, hd, hd), jnp.float32),
+                    jnp.zeros((b, cfg.n_heads, hd), jnp.float32))
+        if kind == "slstm":
+            di = XL.EXPANSION * d
+            return (jnp.zeros((b, di), jnp.float32),
+                    jnp.zeros((b, di), jnp.float32))
+        raise ValueError(kind)
+
+    stack = lambda tree, n: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+    groups = [stack(one(k), cfg.n_groups) for k in cfg.pattern]
+    rem = [one(cfg.pattern[i % len(cfg.pattern)])
+           for i in range(cfg.n_remainder)]
+    return {"groups": groups, "remainder": rem, "index": jnp.int32(0)}
+
+
+def _attn_decode(cfg, p, x, positions, cache, index):
+    """One-token attention with ring-buffer KV cache."""
+    s = cache["k"].shape[1]
+    write = (index % s).astype(jnp.int32)
+    q = jnp.einsum("btd,dnh->btnh", x, p["wq"])
+    k = jnp.einsum("btd,dnh->btnh", x, p["wk"])
+    v = jnp.einsum("btd,dnh->btnh", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]; k = k + p["bk"]; v = v + p["bv"]
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), write, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), write, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions, write, axis=1)
+    mask = L.attention_mask(positions, cpos, causal=cfg.causal,
+                            local_window=cfg.local_window,
+                            n_prefix=cfg.n_prefix) & (cpos >= 0)[:, None, :]
+    out = L.gqa_attention(q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+    out = jnp.einsum("btnh,nhd->btd", out, p["wo"])
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def _apply_layer_decode(cfg, pos, p, x, positions, cache, index):
+    kind = cfg.pattern[pos]
+    dt = x.dtype
+    h = L.rmsnorm(x, p["norm1"])
+    if kind == "attn":
+        out, new_cache = _attn_decode(cfg, p["kind_params"], h, positions,
+                                      cache, index)
+    else:
+        out, new_cache = BLOCK_APPLY[kind](p["kind_params"], h, positions,
+                                           cfg, cache, index)
+    x = (x + out).astype(dt)
+    if cfg.d_ff > 0:
+        h = L.rmsnorm(x, p["norm2"])
+        if "moe" in p:
+            x = (x + MOE.moe_block(p["moe"], h, cfg)).astype(dt)
+        else:
+            x = (x + L.ffn_block(p["ffn"], h, cfg.act)).astype(dt)
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    """tokens: [B, 1] -> (logits [B, 1, vocab], new cache)."""
+    assert cfg.supports_decode
+    index = cache["index"]
+    x = L.embed(tokens, params["embed"]).astype(_dt(cfg.dtype))
+    if cfg.name.startswith(("gemma", "recurrentgemma", "paligemma")):
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+        x = x.astype(_dt(cfg.dtype))
+    b = tokens.shape[0]
+    positions = jnp.full((b, 1), index, jnp.int32)
+
+    def group_body(x, xs):
+        gp, gc = xs
+        new_states = []
+        for pos in range(len(cfg.pattern)):
+            x, st = _apply_layer_decode(cfg, pos, gp[pos], x, positions,
+                                        gc[pos], index)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    if cfg.scan_layers and cfg.n_groups > 0:
+        x, new_groups = jax.lax.scan(group_body, x,
+                                     (params["groups"], cache["groups"]))
+        new_groups = list(new_groups)
+    else:
+        new_groups = cache["groups"]
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            gc = jax.tree.map(lambda a: a[g], cache["groups"])
+            x, st = group_body(x, (gp, gc))
+            new_groups = jax.tree.map(
+                lambda full, new: full.at[g].set(new), new_groups, list(st))
+    new_rem = []
+    for i, p in enumerate(params["remainder"]):
+        x, st = _apply_layer_decode(cfg, i, p, x, positions,
+                                    cache["remainder"][i], index)
+        new_rem.append(st)
+
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = L.unembed(x, params["embed"].astype(x.dtype), cfg.logit_softcap)
+    return logits, {"groups": new_groups, "remainder": new_rem,
+                    "index": index + 1}

@@ -1,0 +1,93 @@
+"""RG-LRU recurrence (recurrentgemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    a_t = a^(c * r_t)                      (a = sigmoid(Lambda), c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill runs the whole sequence with ``jax.lax.associative_scan``
+(log-depth, TPU-friendly); decode is a single recurrent step carrying h.
+The block wraps the RG-LRU between a temporal conv (window 4) and gated
+output projection, per the Griffin recurrent block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import truncated_normal
+
+_C = 8.0
+
+
+def _scan_linear_recurrence(a, bx):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan over time axis=1."""
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh
+
+
+def rglru(p, x, h0=None):
+    """x: [B, T, D] -> (y [B,T,D], h_last [B,D])."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("btd,d->btd", xf, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("btd,d->btd", xf, p["w_x"]) + p["b_x"])
+    log_a = -_C * r * jax.nn.softplus(p["lam"])      # log a_t  (a in (0,1))
+    a = jnp.exp(log_a)
+    gated = i * xf
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * gated
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    h = _scan_linear_recurrence(a, bx)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block(p, x, positions, cfg, state=None, cache_index=None):
+    """Griffin recurrent block: in-proj -> temporal conv4 -> RG-LRU -> gate
+    -> out-proj.  state = (conv_tail [B,3,D'], h [B,D']) for decode."""
+    del positions
+    b, t, d = x.shape
+    u = jnp.einsum("btd,de->bte", x, p["w_in"])       # [B,T,D']
+    g = jnp.einsum("btd,de->bte", x, p["w_gate_in"])
+
+    # temporal conv, window 4, causal
+    wconv = p["conv_w"]                               # [4, D']
+    if state is None:
+        pad = jnp.zeros((b, 3, u.shape[-1]), u.dtype)
+        ue = jnp.concatenate([pad, u], axis=1)
+        conv_tail = ue[:, -3:]
+        uc = sum(ue[:, i:i + t] * wconv[i] for i in range(4))
+        h0 = None
+    else:
+        conv_tail, h0 = state
+        ue = jnp.concatenate([conv_tail.astype(u.dtype), u], axis=1)
+        uc = sum(ue[:, i:i + t] * wconv[i] for i in range(4))
+        conv_tail = ue[:, -3:]
+    y, h_last = rglru(p, uc, h0)
+    y = y * jax.nn.gelu(g)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    return out, (conv_tail, h_last)
+
+
+def init_rglru(key, cfg, dtype):
+    d = cfg.d_model
+    dr = d                                            # recurrence width
+    ks = jax.random.split(key, 7)
+    # Lambda init so a^c in [0.9, 0.999) as in the paper
+    u = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * _C)) - 1.0)  # softplus^-1
+    return {
+        "w_in": truncated_normal(ks[1], (d, dr), dtype, 1.0 / np.sqrt(d)),
+        "w_gate_in": truncated_normal(ks[2], (d, dr), dtype, 1.0 / np.sqrt(d)),
+        "w_out": truncated_normal(ks[3], (dr, d), dtype, 1.0 / np.sqrt(dr)),
+        "conv_w": truncated_normal(ks[4], (4, dr), jnp.float32, 0.5),
+        "w_a": truncated_normal(ks[5], (dr,), jnp.float32, 1.0 / np.sqrt(dr)),
+        "w_x": truncated_normal(ks[6], (dr,), jnp.float32, 1.0 / np.sqrt(dr)),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "lam": lam,
+    }

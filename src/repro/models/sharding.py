@@ -1,0 +1,180 @@
+"""Logical-axis sharding rules -> PartitionSpec trees (MaxText-style).
+
+``param_specs(cfg, params, mesh)`` walks the parameter pytree and assigns a
+PartitionSpec per leaf from its path + shape:
+
+  * attention heads / kv heads / d_ff / experts / vocab -> 'model'
+  * ``param_sharding == "fsdp"``: the remaining large dim is additionally
+    sharded over the data axes (ZeRO-3 weight sharding; XLA inserts the
+    all-gather before use and the reduce-scatter on the gradient)
+  * anything non-divisible falls back to replication (e.g. arctic's 56 heads
+    on a 16-way model axis -> attention stays data-parallel; its MoE — 97%
+    of the FLOPs — still shards 128 experts over 'model')
+
+Activation constraints are applied through ``constrain_act`` driven by the
+module-level ``ACT_AXES`` (set by the launcher; no-op without a mesh, so CPU
+smoke tests run unchanged).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class MeshAxes:
+    data: tuple = ("data",)            # batch / fsdp axes ("pod","data") multi-pod
+    model: str = "model"
+    sizes: dict = dataclasses.field(default_factory=dict)
+
+    def dsize(self):
+        return int(np.prod([self.sizes.get(a, 1) for a in self.data]))
+
+    def msize(self):
+        return int(self.sizes.get(self.model, 1))
+
+
+ACT_AXES: MeshAxes | None = None
+MESH = None                       # jax Mesh when a launcher installed one
+
+
+def set_activation_axes(axes: MeshAxes | None, mesh=None):
+    global ACT_AXES, MESH
+    ACT_AXES = axes
+    MESH = mesh
+
+
+def model_axis_size() -> int:
+    return ACT_AXES.msize() if ACT_AXES is not None else 1
+
+
+def heads_shardable(n: int) -> bool:
+    return ACT_AXES is None or n % ACT_AXES.msize() == 0
+
+
+def constrain_act(x, kind: str):
+    """kind: 'btd' | 'btv' (logits) | 'ecd' (expert buffers)."""
+    axes = ACT_AXES
+    if axes is None:
+        return x
+    if kind == "btd":
+        spec = P(axes.data if x.shape[0] % axes.dsize() == 0 else None,
+                 None, None)
+    elif kind == "btnh_seq":
+        # sequence-sharded attention fallback (head count does not divide
+        # the model axis): shard query positions instead of heads
+        spec = P(axes.data if x.shape[0] % axes.dsize() == 0 else None,
+                 axes.model if x.shape[1] % axes.msize() == 0 else None,
+                 None, None)
+    elif kind == "btv":
+        spec = P(axes.data if x.shape[0] % axes.dsize() == 0 else None, None,
+                 axes.model if x.shape[-1] % axes.msize() == 0 else None)
+    elif kind == "ecd":
+        spec = P(axes.model if x.shape[0] % axes.msize() == 0 else None,
+                 None, None)
+    else:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def _div(n, s):
+    return s > 0 and n % s == 0
+
+
+def param_specs(cfg: ModelConfig, params, axes: MeshAxes):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    m = axes.model
+    msz = axes.msize()
+    dsz = axes.dsize()
+    fsdp = cfg.param_sharding == "fsdp"
+    dax = axes.data
+
+    def fs(dim):  # fsdp-shard this dim?
+        return dax if (fsdp and _div(dim, dsz)) else None
+
+    def spec_of(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        stacked = "groups" in names          # leading layer-group dim
+        base = shape[1:] if stacked else shape
+
+        def out(*spec):
+            spec = list(spec) + [None] * (len(base) - len(spec))
+            return P(*( [None] + spec if stacked else spec ))
+
+        if name == "embed":
+            return out(m if _div(base[0], msz) else None, fs(base[1]))
+        if name == "head":
+            return out(fs(base[0]), m if _div(base[1], msz) else None)
+        if name in ("frontend_proj", "router", "conv_w", "lam",
+                    "norm1", "norm2", "final_norm", "w_a", "w_x",
+                    "b_a", "b_x"):
+            return out()
+        if name == "wq":
+            return (out(fs(base[0]), m, None) if _div(base[1], msz)
+                    else out(fs(base[0])))
+        if name in ("wk", "wv"):
+            return (out(fs(base[0]), m, None) if _div(base[1], msz)
+                    else out(fs(base[0])))
+        if name == "wo":
+            return (out(m, None, fs(base[2])) if _div(base[0], msz)
+                    else out(None, None, fs(base[2])))
+        if name in ("bq", "bk", "bv"):
+            return out(m if _div(base[0], msz) else None)
+        if name in ("w_gate", "w_up", "res_w_gate", "res_w_up"):
+            if len(base) == 3:               # moe experts [E, D, F]
+                return out(m if _div(base[0], msz) else None, None,
+                           fs(base[2]))
+            return out(fs(base[0]), m if _div(base[1], msz) else None)
+        if name in ("w_down", "res_w_down"):
+            if len(base) == 3:               # [E, F, D]
+                return out(m if _div(base[0], msz) else None, fs(base[1]),
+                           None)
+            return out(m if _div(base[0], msz) else None, fs(base[1]))
+        # rglru / xlstm projections
+        if name in ("w_in", "w_gate_in"):
+            return out(None, m if _div(base[1], msz) else None)
+        if name == "w_out":
+            return out(m if _div(base[0], msz) else None)
+        if name in ("w_q", "w_k", "w_v", "w_if"):
+            return out(m if _div(base[0], msz) else None)
+        if name == "w_gates":
+            return out(None, m if _div(base[1], msz) else None)
+        return out()
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def cache_specs(cfg: ModelConfig, cache, axes: MeshAxes, batch_size: int):
+    """Decode-state sharding: batch over data axes when divisible, kv heads
+    over model when divisible; recurrent states batch-sharded."""
+    msz = axes.msize()
+    dsz = axes.dsize()
+    bspec = axes.data if batch_size % dsz == 0 else None
+
+    def spec_of(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1] if names else ""
+        stacked = "groups" in names
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        if name in ("k", "v"):               # [B, S, KV, hd]
+            spec = [bspec, None,
+                    axes.model if _div(shape[2], msz) else None, None]
+        elif name == "pos":
+            spec = [bspec, None]
+        elif name == "index" or not shape:
+            spec = []
+        else:                                # recurrent states [B, ...]
+            spec = [bspec] + [None] * (len(shape) - 1)
+        return P(*([None] + spec if stacked else spec))
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)

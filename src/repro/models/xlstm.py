@@ -1,0 +1,182 @@
+"""xLSTM blocks (arXiv:2405.04517), TPU-adapted.
+
+mLSTM: matrix-memory linear attention.  Training/prefill uses the CHUNKED
+recurrent form (lax.scan over chunks of W tokens, O(T*W + T*d^2/W) — the
+TPU-native analogue of FlashLinearAttention chunking): per-chunk state
+``C [B,H,hd,hd]``, within-chunk masked attention.  Decode is one recurrent
+state update.  Gates use sigmoid (bounded) instead of the paper's
+exponential-with-max-stabiliser — the stabiliser's running max is a
+sequential dependency that defeats chunk parallelism on the MXU; the
+sigmoid variant keeps the memory dynamics and is numerically safe in bf16
+(recorded in DESIGN.md changed-assumptions).
+
+sLSTM: the paper's scalar-memory block has recurrent gate connections
+(R h_{t-1}) that force strict time-sequential execution (they ship custom
+CUDA kernels).  That mechanism does not transfer to TPU profitably; we use
+the diagonal linear-recurrence form (gates from x_t only) executed with an
+associative scan — same gating structure, log-depth on TPU (recorded in
+DESIGN.md changed-assumptions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import truncated_normal
+
+EXPANSION = 2
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_chunk_scan(q, k, v, log_f, i_gate, chunk=128):
+    """q,k,v: [B,H,T,hd]; log_f,i_gate: [B,H,T].  Returns y [B,H,T,hd] and
+    final (C [B,H,hd,hd], n [B,H,hd])."""
+    b, h, t, hd = q.shape
+    w = min(chunk, t)
+    nc = -(-t // w)
+    pad = nc * w - t
+    if pad:
+        zp = lambda x: jnp.pad(x, [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 3))
+        q, k, v = (jnp.pad(x, [(0, 0), (0, 0), (0, pad), (0, 0)]) for x in (q, k, v))
+        log_f = zp(log_f)
+        i_gate = zp(i_gate)
+    qc = q.reshape(b, h, nc, w, hd).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(b, h, nc, w, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, nc, w, hd).transpose(2, 0, 1, 3, 4)
+    lfc = log_f.reshape(b, h, nc, w).transpose(2, 0, 1, 3)
+    igc = i_gate.reshape(b, h, nc, w).transpose(2, 0, 1, 3)
+
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+
+    def step(carry, xs):
+        c, n = carry
+        qw, kw, vw, lf, ig = xs
+        lcum = jnp.cumsum(lf, axis=-1)                    # [B,H,W]
+        ltot = lcum[..., -1:]
+        # inter-chunk: state contribution decayed to each position
+        dec_q = jnp.exp(lcum)[..., None]                  # [B,H,W,1]
+        y_inter = jnp.einsum("bhwd,bhde->bhwe", qw * dec_q, c)
+        n_inter = jnp.einsum("bhwd,bhd->bhw", qw * dec_q, n)
+        # intra-chunk masked linear attention
+        dmat = lcum[..., :, None] - lcum[..., None, :]    # [B,H,W,W]
+        mask = jnp.tril(jnp.ones((w, w), bool))
+        amat = jnp.where(mask, jnp.exp(dmat) * ig[..., None, :], 0.0)
+        smat = jnp.einsum("bhwd,bhsd->bhws", qw, kw) * amat
+        y_intra = jnp.einsum("bhws,bhsd->bhwd", smat, vw)
+        n_intra = smat.sum(axis=-1)
+        y = y_inter + y_intra
+        nn = n_inter + n_intra
+        denom = jnp.maximum(jnp.abs(nn), 1.0)[..., None]
+        out = y / denom
+        # state update
+        dec_k = jnp.exp(ltot - lcum)[..., None]           # decay to chunk end
+        c_new = jnp.exp(ltot)[..., None] * c + jnp.einsum(
+            "bhwd,bhwe->bhde", kw * dec_k * ig[..., None], vw)
+        n_new = jnp.exp(ltot) * n + jnp.einsum(
+            "bhwd->bhd", kw * dec_k * ig[..., None])
+        return (c_new, n_new), out
+
+    (c_fin, n_fin), ys = jax.lax.scan(step, (c0, n0), (qc, kc, vc, lfc, igc))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, nc * w, hd)[:, :, :t]
+    return y, (c_fin, n_fin)
+
+
+def mlstm_decode_step(q, k, v, log_f, i_gate, state):
+    """Single-token recurrent update.  q,k,v: [B,H,1,hd]."""
+    c, n = state
+    f = jnp.exp(log_f[:, :, 0])                           # [B,H]
+    kv = jnp.einsum("bhtd,bhte->bhde", k * i_gate[..., None], v)
+    c = f[..., None, None] * c + kv
+    n = f[..., None] * n + (k * i_gate[..., None])[:, :, 0]
+    y = jnp.einsum("bhtd,bhde->bhte", q, c)
+    nn = jnp.einsum("bhtd,bhd->bht", q, n)
+    return y / jnp.maximum(jnp.abs(nn), 1.0)[..., None], (c, n)
+
+
+def mlstm_block(p, x, positions, cfg, state=None, cache_index=None):
+    """Pre-norm handled by caller.  x: [B,T,D]."""
+    del positions, cache_index
+    b, t, d = x.shape
+    h = cfg.n_heads
+    di = EXPANSION * d
+    hd = di // h
+    u = jnp.einsum("btd,de->bte", x, p["w_up"])
+    g = jnp.einsum("btd,de->bte", x, p["w_gate"])
+    spl = lambda w: jnp.einsum("bte,ef->btf", u, w).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    q, k, v = spl(p["w_q"]), spl(p["w_k"]), spl(p["w_v"])
+    k = k / np.sqrt(hd)
+    gates = jnp.einsum("bte,ef->btf", u, p["w_if"])       # [B,T,2H]
+    i_gate = jax.nn.sigmoid(gates[..., :h]).transpose(0, 2, 1).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gates[..., h:]).transpose(0, 2, 1).astype(jnp.float32)
+    qf, kf, vf = (z.astype(jnp.float32) for z in (q, k, v))
+    if state is None:
+        y, new_state = _mlstm_chunk_scan(qf, kf, vf, log_f, i_gate)
+    else:
+        y, new_state = mlstm_decode_step(qf, kf, vf, log_f, i_gate, state)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, di).astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    return jnp.einsum("bte,ed->btd", y, p["w_down"]), new_state
+
+
+def init_mlstm(key, cfg, dtype):
+    d = cfg.d_model
+    di = EXPANSION * d
+    ks = jax.random.split(key, 7)
+    sc = 1.0 / np.sqrt(d)
+    sci = 1.0 / np.sqrt(di)
+    return {
+        "w_up": truncated_normal(ks[0], (d, di), dtype, sc),
+        "w_gate": truncated_normal(ks[1], (d, di), dtype, sc),
+        "w_q": truncated_normal(ks[2], (di, di), dtype, sci),
+        "w_k": truncated_normal(ks[3], (di, di), dtype, sci),
+        "w_v": truncated_normal(ks[4], (di, di), dtype, sci),
+        "w_if": truncated_normal(ks[5], (di, 2 * cfg.n_heads), jnp.float32, sci),
+        "w_down": truncated_normal(ks[6], (di, d), dtype, sci),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (diagonal linear-recurrence form)
+# ---------------------------------------------------------------------------
+
+def slstm_block(p, x, positions, cfg, state=None, cache_index=None):
+    del positions, cache_index
+    b, t, d = x.shape
+    di = EXPANSION * d
+    u = jnp.einsum("btd,de->bte", x, p["w_up"]).astype(jnp.float32)
+    gates = jnp.einsum("btd,dg->btg", x, p["w_gates"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(gates[..., :di])
+    f = jax.nn.sigmoid(gates[..., di:2 * di] + 1.0)       # forget bias +1
+    o = jax.nn.sigmoid(gates[..., 2 * di:3 * di])
+    z = jnp.tanh(u)
+    if state is None:
+        def combine(a, bb):
+            a1, b1 = a
+            a2, b2 = bb
+            return a1 * a2, a2 * b1 + b2
+        c = jax.lax.associative_scan(combine, (f, i * z), axis=1)[1]
+        n = jax.lax.associative_scan(combine, (f, i), axis=1)[1]
+        new_state = (c[:, -1], n[:, -1])
+    else:
+        c0, n0 = state
+        c = (f[:, 0] * c0 + i[:, 0] * z[:, 0])[:, None]
+        n = (f[:, 0] * n0 + i[:, 0])[:, None]
+        new_state = (c[:, 0], n[:, 0])
+    h = o * c / jnp.maximum(n, 1.0)
+    return jnp.einsum("bte,ed->btd", h.astype(x.dtype), p["w_down"]), new_state
+
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    di = EXPANSION * d
+    ks = jax.random.split(key, 3)
+    return {
+        "w_up": truncated_normal(ks[0], (d, di), dtype, 1.0 / np.sqrt(d)),
+        "w_gates": truncated_normal(ks[1], (d, 3 * di), dtype, 1.0 / np.sqrt(d)),
+        "w_down": truncated_normal(ks[2], (di, d), dtype, 1.0 / np.sqrt(di)),
+    }

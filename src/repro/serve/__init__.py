@@ -1,0 +1,1 @@
+from repro.serve.serve import make_serve_step, prefill, generate  # noqa: F401

@@ -1,0 +1,59 @@
+"""Batched serving: prefill + single-token decode steps.
+
+``serve_step`` is what the decode_* / long_* dry-run cells lower: one new
+token against a KV/recurrent cache of ``seq_len`` (the brief's definition).
+``generate`` is the runnable example driver (greedy / temperature sampling).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, tokens [B,1], cache) -> (next_token, logits, cache)."""
+
+    def serve_step(params, tokens, cache):
+        logits, cache = M.decode_step(params, cfg, tokens, cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], logits, cache
+
+    return serve_step
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int):
+    """Run the full prompt, build the decode cache by replaying tokens
+    through decode_step (simple and cache-layout exact; a fused prefill
+    that converts forward() states into the cache is the optimised path
+    for the recurrent/xlstm families)."""
+    b, t = tokens.shape
+    cache = M.init_cache(cfg, b, max_len)
+    step = jax.jit(functools.partial(M.decode_step, cfg=cfg))
+
+    logits = None
+    for i in range(t):
+        logits, cache = step(params, tokens=tokens[:, i:i + 1], cache=cache)
+    return logits, cache
+
+
+def generate(params, cfg: ModelConfig, prompt, n_tokens: int, max_len: int,
+             temperature: float = 0.0, key=None):
+    """Greedy/temperature generation driver for the examples."""
+    logits, cache = prefill(params, cfg, prompt, max_len)
+    step = jax.jit(make_serve_step(cfg))
+    out = []
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    for i in range(n_tokens):
+        out.append(tok)
+        tok, logits, cache = step(params, tok, cache)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1].astype(jnp.float32) / temperature
+            ).astype(jnp.int32)[:, None]
+    return jnp.concatenate(out, axis=1)

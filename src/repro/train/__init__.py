@@ -1,0 +1,4 @@
+from repro.train.optimizer import adamw_init, adamw_update  # noqa: F401
+from repro.train.train_step import (  # noqa: F401
+    TrainState, make_train_step, loss_fn, init_train_state,
+)

@@ -1,0 +1,53 @@
+"""AdamW in raw JAX (no optax in the container).
+
+Moments can be kept in bf16 for the MoE giants (``opt_dtype='bfloat16'`` —
+the ZeRO-style memory story in DESIGN.md §5); update math is always f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, opt_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, dtype=opt_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = opt["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        delta = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+        delta = delta + weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, opt["m"], opt["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

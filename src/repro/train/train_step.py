@@ -1,0 +1,131 @@
+"""Training step: CE loss (+ masked variants for the modality stubs),
+grad clip, AdamW, optional microbatch gradient accumulation, and a
+bf16-compressed gradient all-reduce option (distributed-optimization trick:
+halves the data-parallel gradient collective bytes; enabled per-config)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train.optimizer import (adamw_init, adamw_update,
+                                   clip_by_global_norm)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def init_train_state(key, cfg: ModelConfig):
+    params = M.init_params(key, cfg)
+    opt_dtype = jnp.bfloat16 if cfg.opt_dtype == "bfloat16" else jnp.float32
+    return TrainState(params, adamw_init(params, opt_dtype))
+
+
+def _nll(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, loss_chunk: int = 0):
+    """CE loss.  loss_chunk > 0 streams the unembed+softmax over sequence
+    chunks of that many positions, bounding the live [tokens, vocab] logits
+    buffer to chunk*vocab (the full buffer at 32k seq x 256k vocab is
+    ~0.5 TB/device in f32 — the single biggest memory-roofline offender in
+    the baseline dry-run)."""
+    labels = batch["labels"]
+    if not loss_chunk:
+        logits = M.forward(params, cfg, batch).astype(jnp.float32)
+        if cfg.frontend == "vision_patches":
+            logits = logits[:, -labels.shape[1]:]
+        nll = _nll(logits, labels)
+    else:
+        hidden = M.forward(params, cfg, batch, return_hidden=True)
+        if cfg.frontend == "vision_patches":
+            hidden = hidden[:, -labels.shape[1]:]
+        table = (params["head"].T if not cfg.causal
+                 else params["embed"]).astype(hidden.dtype)
+        b, t, d = hidden.shape
+        nc = max(1, t // loss_chunk)
+        while t % nc:
+            nc -= 1
+        hc = hidden.reshape(b, nc, t // nc, d).swapaxes(0, 1)
+        yc = labels.reshape(b, nc, t // nc).swapaxes(0, 1)
+
+        def chunk(h, y):
+            logits = jnp.einsum("btd,vd->btv", h, table)
+            if cfg.logit_softcap > 0:
+                logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+            return _nll(logits, y)
+
+        nll = jax.lax.map(lambda hy: chunk(*hy), (hc, yc))
+        nll = nll.swapaxes(0, 1).reshape(b, t)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, *, lr=3e-4, max_grad_norm=1.0,
+                    microbatch: int = 0, grad_dtype: str | None = None,
+                    loss_chunk: int | None = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatch > 0: gradient accumulation via lax.scan over microbatches
+    (activation memory / straggler smoothing knob).
+    grad_dtype='bfloat16': gradients are cast before the psum that the
+    sharded params imply -> 2x less gradient traffic on the data axes.
+    loss_chunk: positions per streamed-CE chunk; None = auto (on for
+    vocab >= 32k, the memory-roofline regime), 0 = off.
+    """
+    if loss_chunk is None:
+        loss_chunk = 512 if cfg.vocab >= 32_768 else 0
+    if grad_dtype is None:
+        # giants already keep bf16 moments; bf16 grads halve the ZeRO
+        # reduce-scatter / data-parallel psum bytes (distributed-optimization
+        # trick; EXPERIMENTS.md records the collective-term delta)
+        grad_dtype = "bfloat16" if cfg.opt_dtype == "bfloat16" else "float32"
+
+    def grads_of(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, cfg, batch, loss_chunk=loss_chunk)
+        if grad_dtype == "bfloat16":
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        return loss, grads
+
+    def train_step(state: TrainState, batch):
+        if microbatch and microbatch > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(state.params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, g_acc, g)), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape,
+                                    jnp.bfloat16 if grad_dtype == "bfloat16"
+                                    else jnp.float32),
+                state.params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), zero),
+                                            micro)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = grads_of(state.params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt = adamw_update(grads, state.opt, state.params, lr=lr)
+        return TrainState(params, opt), {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

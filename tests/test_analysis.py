@@ -1,0 +1,68 @@
+"""Roofline-term extraction: HLO collective parser + correction math."""
+import pytest
+
+from repro.launch import analysis
+
+HLO = """
+HloModule jit_step
+ENTRY main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %p0), replica_groups={}
+  %ag = bf16[64,256]{1,0} all-gather(bf16[8,256]{1,0} %x), dimensions={0}
+  %rs = f32[2,128]{1,0} reduce-scatter(f32[16,128]{1,0} %p0), dimensions={0}
+  %a2a = f32[4,32]{1,0} all-to-all(f32[4,32]{1,0} %y), dimensions={0}
+  %cp = s32[100]{0} collective-permute(s32[100]{0} %z)
+  ROOT %t = (f32[16,128]{1,0}) tuple(%ar)
+}
+"""
+
+
+def test_collective_parser_ring_convention():
+    c = analysis.collective_bytes(HLO)
+    assert c["all-reduce"] == 2 * 16 * 128 * 4          # 2x output
+    assert c["all-gather"] == 64 * 256 * 2              # 1x output
+    assert c["reduce-scatter"] == 16 * 128 * 4          # 1x INPUT
+    assert c["all-to-all"] == 4 * 32 * 4
+    assert c["collective-permute"] == 100 * 4
+    assert c["total"] == sum(v for k, v in c.items() if k != "total")
+
+
+def test_shape_bytes_dtypes():
+    assert analysis._shape_bytes("bf16[2,3]") == 12
+    assert analysis._shape_bytes("pred[8]") == 8
+    assert analysis._shape_bytes("tuple()") == 0
+
+
+def test_scan_depth_correction():
+    mk = lambda f, b, c: {"flops": f, "bytes_accessed": b,
+                          "collectives": {"total": c},
+                          "memory": {"argument_bytes": 0, "output_bytes": 0,
+                                     "temp_bytes": 0, "alias_bytes": 0}}
+    raw = mk(100.0, 1000.0, 10.0)
+    b1 = mk(30.0, 300.0, 3.0)
+    b2 = mk(50.0, 500.0, 5.0)       # body = 20 / 200 / 2
+    out = analysis.corrected(raw, b1, b2, n_groups=11)
+    assert out["flops"] == pytest.approx(100 + 10 * 20)
+    assert out["bytes_accessed"] == pytest.approx(1000 + 10 * 200)
+    assert out["collective_bytes_corrected"] == pytest.approx(10 + 10 * 2)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = analysis.Roofline(flops=197e12, bytes_accessed=819e9 * 2,
+                          coll_bytes=50e9 * 0.5, chips=256)
+    t = r.terms()
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(2.0)
+    assert t["collective_s"] == pytest.approx(0.5)
+    assert t["bottleneck"] == "memory"
+    assert t["step_lower_bound_s"] == pytest.approx(2.0)
+
+
+def test_model_flops_moe_active():
+    from repro import configs
+    cfg = configs.get("arctic_480b")
+    mf_train = analysis.model_flops(cfg, "train", 1000)
+    mf_dec = analysis.model_flops(cfg, "decode", 1000)
+    assert mf_train == 6 * cfg.active_param_count() * 1000
+    assert mf_dec == 2 * cfg.active_param_count() * 1000
+    assert cfg.active_param_count() < cfg.param_count() / 10

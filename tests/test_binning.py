@@ -1,0 +1,85 @@
+"""Hybrid-feature binning + the paper's Table 3 comparison semantics."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fit_bins, transform, evaluate_predicate, OP_LE, OP_GT, OP_EQ
+from repro.data import make_hybrid_table
+
+
+def test_hybrid_column_layout_exact():
+    cols = [[1.0, 2.0, "cat", None, 3.5, "dog", "2.0"]]
+    t = fit_bins(cols)
+    meta = t.metas[0]
+    assert meta.n_num == 3            # unique numerics {1.0, 2.0, 3.5}
+    assert meta.n_cat == 2            # {"cat", "dog"}
+    assert meta.exact
+    b = t.bins[:, 0]
+    assert b[0] == 0 and b[1] == 1 and b[4] == 2      # ordered numeric bins
+    assert b[6] == 1                  # "2.0" == 2.0
+    assert b[2] == 3 and b[5] == 4    # categorical ids after numeric
+    assert b[3] == meta.missing_bin   # None -> missing bin
+
+
+def test_table3_comparison_semantics():
+    """10 = 'cat' False; 10 != 'cat' True; 10 <= 'cat' False; 10 > 'cat' False."""
+    cols = [[10.0, "cat"]]
+    t = fit_bins(cols)
+    xb = jnp.asarray(t.bins[:, 0])
+    n_num = jnp.asarray([t.metas[0].n_num, t.metas[0].n_num])
+    cat_bin = jnp.int32(t.metas[0].n_num)     # the 'cat' bin
+    num_bin = jnp.int32(0)                    # the 10.0 bin
+    # numeric value vs categorical candidate / categorical value vs numeric
+    assert not bool(evaluate_predicate(xb[0], n_num[0], jnp.int32(OP_EQ), cat_bin))
+    assert not bool(evaluate_predicate(xb[1], n_num[1], jnp.int32(OP_LE), num_bin))
+    assert not bool(evaluate_predicate(xb[1], n_num[1], jnp.int32(OP_GT), num_bin))
+    assert bool(evaluate_predicate(xb[1], n_num[1], jnp.int32(OP_EQ), cat_bin))
+    assert bool(evaluate_predicate(xb[0], n_num[0], jnp.int32(OP_LE), num_bin))
+
+
+def test_missing_never_positive():
+    cols = [[None, 1.0, 2.0, "a"]]
+    t = fit_bins(cols)
+    meta = t.metas[0]
+    miss = jnp.int32(meta.missing_bin)
+    nn = jnp.int32(meta.n_num)
+    for op in (OP_LE, OP_GT, OP_EQ):
+        for cand in range(meta.n_num + meta.n_cat):
+            assert not bool(evaluate_predicate(miss, nn, jnp.int32(op),
+                                               jnp.int32(cand)))
+
+
+def test_transform_roundtrip():
+    cols, _ = make_hybrid_table(200, seed=1)
+    t = fit_bins(cols)
+    again = transform(cols, t)
+    np.testing.assert_array_equal(t.bins, again)
+
+
+def test_unseen_values_at_inference():
+    t = fit_bins([[1.0, 2.0, "a"]])
+    new = transform([[3.0, "zzz", None, 1.5]], t)
+    meta = t.metas[0]
+    assert new[0, 0] == meta.n_num - 1        # clamp above max -> last numeric bin
+    assert new[1, 0] == meta.missing_bin      # unseen category -> missing/other
+    assert new[2, 0] == meta.missing_bin
+    assert new[3, 0] == 1                     # 1.5 in (1.0, 2.0] -> bin of 2.0
+
+
+def test_quantile_mode_monotone():
+    rng = np.random.default_rng(0)
+    vals = list(rng.normal(size=5000))
+    t = fit_bins([vals], max_num_bins=16)
+    assert not t.metas[0].exact
+    assert t.metas[0].n_num <= 16
+    order = np.argsort(np.asarray(vals))
+    b = t.bins[order, 0]
+    assert (np.diff(b) >= 0).all()            # binning preserves order
+
+
+def test_no_preencoding_width():
+    """The paper's memory claim: no one-hot blow-up — table stays [M, K]."""
+    cols, _ = make_hybrid_table(500, seed=2)
+    t = fit_bins(cols)
+    assert t.bins.shape == (500, 4)
+    assert t.bins.dtype == np.int32

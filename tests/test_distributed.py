@@ -1,0 +1,78 @@
+"""Distributed build == single-device build, exactly.
+
+Runs in a subprocess so the 8 placeholder CPU devices
+(XLA_FLAGS=--xla_force_host_platform_device_count=8) never leak into the
+other tests (the brief: smoke tests must see 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from repro.core import fit_bins, build_tree, TreeConfig
+from repro.core.distributed import DistConfig, build_tree_distributed
+from repro.data import make_classification, make_regression
+
+assert len(jax.devices()) == 8
+
+MESH = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+def check(task, cols, y, n_classes, dist, exact=True):
+    cfg = TreeConfig(max_depth=10, task=task, chunk_slots=64)
+    table = fit_bins(cols, max_num_bins=32)
+    t0 = build_tree(table, y, cfg, n_classes=n_classes)
+    t1 = build_tree_distributed(table, y, cfg, mesh=MESH, dist=dist,
+                                n_classes=n_classes)
+    if exact:
+        # integer class counts are psum-order independent -> the distributed
+        # tree must reproduce the local tree bit-for-bit
+        assert t0.n_nodes == t1.n_nodes, (t0.n_nodes, t1.n_nodes)
+        n = t0.n_nodes
+        for f in ("feat", "op", "tbin", "label", "count", "left", "right",
+                  "leaf"):
+            a = np.asarray(getattr(t0, f)[:n]); b = np.asarray(getattr(t1, f)[:n])
+            assert np.array_equal(a, b), (task, f, np.flatnonzero(a != b)[:5])
+        s0 = np.asarray(t0.score[:n]); s1 = np.asarray(t1.score[:n])
+        assert np.allclose(s0, s1, atol=1e-4), (task, "score")
+    else:
+        # float moment sums are not associativity-stable across psum; check
+        # semantic equivalence instead of structural identity
+        from repro.core import predict_bins
+        p0 = np.asarray(predict_bins(t0, table.bins, table.n_num))
+        p1 = np.asarray(predict_bins(t1, table.bins, table.n_num))
+        rmse = float(np.sqrt(((p0 - p1) ** 2).mean()))
+        scale = float(np.std(np.asarray(y))) + 1e-9
+        assert rmse < 0.05 * scale, (task, rmse, scale)
+        assert abs(t0.n_nodes - t1.n_nodes) <= 0.05 * t0.n_nodes + 8
+
+cols, y = make_classification(600, 7, 3, seed=9, n_cat_features=2,
+                              missing_frac=0.02)
+# data+feature parallel, multi-pod data, and feature-only
+for dist in (DistConfig(data_axes=("pod", "data"), model_axis="model"),
+             DistConfig(data_axes=("data",), model_axis=None),
+             DistConfig(data_axes=(), model_axis="model")):
+    check("classification", cols, y, 3, dist)
+
+colsr, yr = make_regression(500, 5, seed=4)
+check("regression", colsr, yr, None,
+      DistConfig(data_axes=("pod", "data"), model_axis="model"), exact=False)
+check("regression_variance", colsr, yr, None,
+      DistConfig(data_axes=("pod", "data"), model_axis="model"), exact=False)
+print("DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_equals_local():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "DISTRIBUTED_OK" in r.stdout

@@ -1,0 +1,46 @@
+"""Beyond-paper ensembles built on Superfast Selection."""
+import numpy as np
+
+from repro.core import fit_bins, transform
+from repro.core.forest import GradientBoostedTrees, RandomForest
+from repro.core.tree import TreeConfig
+from repro.data import (make_classification, make_regression,
+                        train_val_test_split)
+
+
+def test_random_forest_beats_mean_tree():
+    from repro.core import predict_bins
+    cols, y = make_classification(2000, 8, 3, seed=2, noise=0.1,
+                                  teacher_depth=4)
+    (tr_c, tr_y), _, (te_c, te_y) = train_val_test_split(cols, y)
+    table = fit_bins(tr_c, max_num_bins=32)
+    rf = RandomForest(n_trees=9, max_features=0.9,
+                      config=TreeConfig(max_depth=12)).fit(
+        table, tr_y, n_classes=3)
+    tb = transform(te_c, table)
+    pred = rf.predict(tb)
+    accs = [float((np.asarray(predict_bins(t, tb, tab.n_num)) == te_y).mean())
+            for t, tab in zip(rf.trees, rf.tables)]
+    # the vote beats the average member (the point of bagging)
+    assert (pred == te_y).mean() > np.mean(accs)
+    assert (pred == te_y).mean() > 0.8
+
+
+def test_gbt_reduces_residuals_monotonically():
+    cols, y = make_regression(1500, 6, seed=7)
+    (tr_c, tr_y), _, (te_c, te_y) = train_val_test_split(cols, y)
+    table = fit_bins(tr_c, max_num_bins=32)
+    gbt = GradientBoostedTrees(n_trees=8).fit(table, tr_y)
+    # rmse with k trees must be non-increasing on train
+    pred = np.full_like(tr_y, gbt.base)
+    last = np.inf
+    for t in gbt.trees:
+        from repro.core import predict_bins
+        pred = pred + gbt.learning_rate * np.asarray(
+            predict_bins(t, table.bins, table.n_num))
+        rmse = float(np.sqrt(((pred - tr_y) ** 2).mean()))
+        assert rmse <= last + 1e-4
+        last = rmse
+    te_pred = gbt.predict(transform(te_c, table))
+    base = float(np.sqrt(((tr_y.mean() - te_y) ** 2).mean()))
+    assert float(np.sqrt(((te_pred - te_y) ** 2).mean())) < base

@@ -1,0 +1,70 @@
+"""Heuristic invariants (hypothesis property tests)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.heuristics import info_gain, gini, chi_square, sse_gain
+
+counts = st.lists(st.integers(0, 50), min_size=2, max_size=6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(counts, counts)
+def test_info_gain_bounds(p, n):
+    if len(p) != len(n):
+        n = (n + [0] * len(p))[:len(p)]
+    if sum(p) + sum(n) == 0:
+        return
+    pos = jnp.asarray(p, jnp.float32)
+    neg = jnp.asarray(n, jnp.float32)
+    v = float(info_gain(pos, neg))
+    # -H(T|a) is in [-log C, 0]
+    assert v <= 1e-6
+    assert v >= -np.log(len(p)) - 1e-5
+
+
+@settings(max_examples=60, deadline=None)
+@given(counts)
+def test_pure_split_is_optimal(p):
+    """Sending each class wholly to one side maximises IG and Gini."""
+    if sum(p) == 0 or len([x for x in p if x > 0]) < 2:
+        return
+    c = len(p)
+    arr = np.asarray(p, np.float32)
+    # pure: class 0 left, the rest right
+    pure_pos = np.zeros(c, np.float32); pure_pos[0] = arr[0]
+    pure_neg = arr.copy(); pure_neg[0] = 0
+    if pure_pos.sum() == 0 or pure_neg.sum() == 0:
+        return
+    for h in (info_gain, gini):
+        v_pure = float(h(jnp.asarray(pure_pos), jnp.asarray(pure_neg)))
+        # proportional (useless) split: same class mix both sides
+        v_prop = float(h(jnp.asarray(arr / 2), jnp.asarray(arr / 2)))
+        assert v_pure >= v_prop - 1e-5
+
+
+def test_chi_square_independence_is_zero():
+    pos = jnp.asarray([10.0, 20.0, 30.0])
+    neg = pos * 2.5                        # same class distribution
+    assert float(chi_square(pos, neg)) == pytest.approx(0.0, abs=1e-4)
+
+
+def test_sse_gain_prefers_separating_means():
+    # side A: mean 0, side B: mean 10 -> separating beats mixing
+    a = jnp.asarray([10.0, 0.0, 123.0])    # (cnt, sum, sum2)
+    b = jnp.asarray([10.0, 100.0, 1123.0])
+    mixed = (a + b) / 2
+    assert float(sse_gain(a, b)) > float(sse_gain(mixed, mixed))
+
+
+@settings(max_examples=40, deadline=None)
+@given(counts, counts)
+def test_symmetry(p, n):
+    if len(p) != len(n):
+        n = (n + [0] * len(p))[:len(p)]
+    pos = jnp.asarray(p, jnp.float32)
+    neg = jnp.asarray(n, jnp.float32)
+    for h in (info_gain, gini, chi_square):
+        assert float(h(pos, neg)) == pytest.approx(float(h(neg, pos)),
+                                                   abs=1e-5, rel=1e-5)

@@ -1,0 +1,101 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    # (M, K, B, C, S)
+    (64, 1, 4, 2, 1),
+    (300, 5, 17, 4, 6),
+    (128, 3, 33, 2, 9),       # odd bins, slot count > slot_chunk
+    (1000, 2, 8, 26, 3),      # many classes
+    (37, 7, 5, 3, 2),         # M not divisible by tile
+]
+
+
+def _mk(m, k, b, c, s, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    bins = jnp.asarray(rng.integers(0, b, size=(m, k)), dtype=jnp.int32)
+    stats = jnp.asarray(rng.uniform(size=(m, c)).astype(dtype))
+    slot = jnp.asarray(rng.integers(-1, s, size=(m,)), dtype=jnp.int32)
+    return bins, stats, slot
+
+
+@pytest.mark.parametrize("m,k,b,c,s", SHAPES)
+def test_histogram_kernel_matches_ref(m, k, b, c, s):
+    bins, stats, slot = _mk(m, k, b, c, s)
+    got = ops.histogram(bins, stats, slot, num_slots=s, n_bins=b)
+    want = ref.histogram_ref(bins, stats, slot, num_slots=s, n_bins=b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,b,c,s", SHAPES[:3])
+@pytest.mark.parametrize("tile", [64, 256])
+def test_histogram_kernel_tile_invariance(m, k, b, c, s, tile):
+    from repro.kernels.histogram import histogram_pallas
+    bins, stats, slot = _mk(m, k, b, c, s, seed=1)
+    got = histogram_pallas(bins, stats, slot, num_slots=s, n_bins=b,
+                           slot_chunk=2, example_tile=tile, interpret=True)
+    want = ref.histogram_ref(bins, stats, slot, num_slots=s, n_bins=b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_histogram_mass_conservation():
+    bins, stats, slot = _mk(500, 4, 16, 3, 8, seed=2)
+    h = np.asarray(ops.histogram(bins, stats, slot, num_slots=8, n_bins=16))
+    active = np.asarray(slot) >= 0
+    want = np.asarray(stats)[active].sum(0)
+    np.testing.assert_allclose(h.sum(axis=(0, 2)),
+                               np.tile(want, (4, 1)), rtol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,b,c,s", SHAPES)
+@pytest.mark.parametrize("heur", ["info_gain", "gini", "chi_square"])
+def test_split_scan_matches_ref(m, k, b, c, s, heur):
+    rng = np.random.default_rng(42)
+    hist = jnp.asarray(rng.poisson(2, size=(s, k, b, c)), dtype=jnp.float32)
+    n_num = jnp.asarray(rng.integers(0, b, size=(k,)), dtype=jnp.int32)
+    n_cat = jnp.asarray(np.minimum(rng.integers(0, 4, size=(k,)),
+                                   b - np.asarray(n_num)), dtype=jnp.int32)
+    s1, b1, o1 = ops.split_scan(hist, n_num, n_cat, heuristic=heur)
+    s0, b0, o0 = ref.split_scan_ref(hist, n_num, n_cat, heuristic=heur)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                               rtol=1e-5, atol=1e-5)
+    # bin/op must agree wherever the best score is unique
+    ties = np.isclose(np.asarray(s1), np.asarray(s0), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(b1)[ties & (np.asarray(b1) == np.asarray(b0))],
+                                  np.asarray(b0)[ties & (np.asarray(b1) == np.asarray(b0))])
+
+
+def test_split_scan_sse_moments():
+    rng = np.random.default_rng(3)
+    s, k, b = 4, 3, 12
+    hist = np.zeros((s, k, b, 3), dtype=np.float32)
+    cnt = rng.poisson(5, size=(s, k, b)).astype(np.float32)
+    mu = rng.normal(size=(s, k, b)).astype(np.float32)
+    hist[..., 0] = cnt
+    hist[..., 1] = cnt * mu
+    hist[..., 2] = cnt * (mu ** 2 + 0.1)
+    hist = jnp.asarray(hist)
+    n_num = jnp.full((k,), b, dtype=jnp.int32)
+    n_cat = jnp.zeros((k,), dtype=jnp.int32)
+    s1, b1, o1 = ops.split_scan(hist, n_num, n_cat, heuristic="sse")
+    s0, b0, o0 = ref.split_scan_ref(hist, n_num, n_cat, heuristic="sse")
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 4), st.integers(2, 20),
+       st.integers(1, 5), st.integers(1, 7), st.integers(0, 10_000))
+def test_property_histogram_random_shapes(m, k, b, c, s, seed):
+    bins, stats, slot = _mk(m, k, b, c, s, seed=seed)
+    got = ops.histogram(bins, stats, slot, num_slots=s, n_bins=b)
+    want = ref.histogram_ref(bins, stats, slot, num_slots=s, n_bins=b)
+    assert got.shape == (s, k, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

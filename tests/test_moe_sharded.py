@@ -1,0 +1,48 @@
+"""shard_map local-expert MoE == reference jnp MoE (8-device subprocess)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from repro import configs
+from repro.models import model as M, moe as MOE
+from repro.models.sharding import set_activation_axes
+from repro.launch.mesh import mesh_axes
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = configs.get_smoke("arctic_480b")   # 4 experts % 4 == 0
+params = M.init_params(jax.random.key(0), cfg)
+x = jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model),
+                      dtype=jnp.bfloat16)
+layer = jax.tree.map(lambda a: a[0], params["groups"][0])
+p = layer["moe"]
+
+set_activation_axes(None, None)
+ref = MOE._moe_block_jnp(p, x, cfg)
+
+set_activation_axes(mesh_axes(mesh), mesh)
+with mesh:
+    out = jax.jit(lambda p, x: MOE.moe_block(p, x, cfg))(p, x)
+
+err = float(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max())
+scale = float(jnp.abs(ref.astype(jnp.float32)).max())
+assert err < 0.05 * scale + 1e-3, (err, scale)
+print("MOE_SHARDED_OK", err, scale)
+"""
+
+
+@pytest.mark.slow
+def test_moe_sharded_equals_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "MOE_SHARDED_OK" in r.stdout

@@ -1,0 +1,76 @@
+"""Regression trees: the paper's label-split (Algorithm 6) mode and the
+beyond-paper variance mode."""
+import numpy as np
+import pytest
+
+from repro.core import fit_bins, transform, build_tree, TreeConfig, predict_bins
+from repro.core.tree import _label_split_thresholds
+import jax.numpy as jnp
+
+from repro.data import make_regression, train_val_test_split
+
+
+def _rmse(a, b):
+    return float(np.sqrt(((a - b) ** 2).mean()))
+
+
+@pytest.fixture(scope="module")
+def reg_data():
+    cols, y = make_regression(2500, 6, seed=11, n_cat_features=1)
+    return train_val_test_split(cols, y)
+
+
+@pytest.mark.parametrize("task", ["regression", "regression_variance"])
+def test_regression_beats_mean(reg_data, task):
+    (tr_c, tr_y), _, (te_c, te_y) = reg_data
+    table = fit_bins(tr_c, max_num_bins=64)
+    tree = build_tree(table, tr_y, TreeConfig(max_depth=24, task=task,
+                                              min_samples_split=10))
+    tb = transform(te_c, table)
+    pred = np.asarray(predict_bins(tree, tb, table.n_num))
+    base = _rmse(np.full_like(te_y, tr_y.mean()), te_y)
+    assert _rmse(pred, te_y) < 0.75 * base
+    # and the tree fits the training set far better than the mean
+    trp = np.asarray(predict_bins(tree, table.bins, table.n_num))
+    assert _rmse(trp, tr_y) < 0.4 * base
+
+
+def test_label_split_threshold_oracle():
+    """Algorithm 6 on a hand-checkable case: labels {0,0,0,10,10} — the best
+    SSE split separates the 0s from the 10s."""
+    lhist = np.zeros((1, 2, 3), dtype=np.float32)
+    lhist[0, 0] = (3, 0.0, 0.0)       # label-bin 0: three 0s
+    lhist[0, 1] = (2, 20.0, 200.0)    # label-bin 1: two 10s
+    tstar, mean, cnt, sse = _label_split_thresholds(jnp.asarray(lhist))
+    assert int(tstar[0]) == 0
+    assert float(mean[0]) == pytest.approx(4.0)
+    assert float(cnt[0]) == 5
+    assert float(sse[0]) == pytest.approx(200 - 400 / 5)
+
+
+def test_label_split_matches_bruteforce():
+    rng = np.random.default_rng(5)
+    y = rng.normal(size=40).astype(np.float64)
+    order = np.sort(np.unique(y))
+    lhist = np.zeros((1, len(order), 3), dtype=np.float32)
+    for v in y:
+        i = np.searchsorted(order, v)
+        lhist[0, i] += (1.0, v, v * v)
+    tstar, _, _, _ = _label_split_thresholds(jnp.asarray(lhist))
+    # brute force over thresholds
+    best, arg = -np.inf, -1
+    for t in range(len(order) - 1):
+        s1 = y[y <= order[t]]; s2 = y[y > order[t]]
+        score = s1.sum() ** 2 / len(s1) + s2.sum() ** 2 / len(s2)
+        if score > best:
+            best, arg = score, t
+    assert int(tstar[0]) == arg
+
+
+def test_leaf_labels_are_means():
+    cols = [[float(i) for i in range(20)]]
+    y = np.asarray([1.0] * 10 + [5.0] * 10, dtype=np.float32)
+    table = fit_bins(cols)
+    tree = build_tree(table, y, TreeConfig(max_depth=2, task="regression"))
+    pred = np.asarray(predict_bins(tree, table.bins, table.n_num))
+    np.testing.assert_allclose(pred, y, atol=1e-5)

@@ -1,0 +1,61 @@
+"""Sharding-rule unit tests: every param of every assigned arch gets a spec
+whose named axes divide the corresponding dims on the production mesh."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.models.sharding import MeshAxes, param_specs
+
+AXES = MeshAxes(data=("data",), model="model",
+                sizes={"data": 16, "model": 16})
+AXES_MP = MeshAxes(data=("pod", "data"), model="model",
+                   sizes={"pod": 2, "data": 16, "model": 16})
+
+
+def _check(cfg, axes):
+    structs = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                             jax.random.key(0))
+    specs = param_specs(cfg, structs, axes)
+
+    def ok(path, leaf, spec):
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, part in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if part is None:
+                continue
+            parts = part if isinstance(part, tuple) else (part,)
+            size = int(np.prod([axes.sizes[a] for a in parts]))
+            assert dim % size == 0, (path, spec, leaf.shape)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: ok(p, l, s), structs, specs)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_param_specs_divisible_single_pod(arch):
+    _check(configs.get(arch), AXES)
+
+
+@pytest.mark.parametrize("arch", ["arctic_480b", "gemma_7b", "xlstm_125m"])
+def test_param_specs_divisible_multi_pod(arch):
+    _check(configs.get(arch), AXES_MP)
+
+
+def test_moe_experts_sharded_over_model():
+    cfg = configs.get("arctic_480b")
+    structs = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                             jax.random.key(0))
+    specs = param_specs(cfg, structs, AXES)
+    sp = specs["groups"][0]["moe"]["w_gate"]    # stacked [G, E, D, F]
+    assert tuple(sp)[1] == "model"              # experts on the model axis
+    assert tuple(sp)[3] in ("data", ("data",))  # fsdp on d_ff
+
+
+def test_indivisible_heads_fall_back_to_replication():
+    cfg = configs.get("smollm_360m")            # 15 heads vs 16-way axis
+    structs = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                             jax.random.key(0))
+    specs = param_specs(cfg, structs, AXES)
+    sp = tuple(specs["groups"][0]["kind_params"]["wq"])
+    assert "model" not in sp                    # replicated weights

@@ -1,0 +1,150 @@
+"""Superfast Selection vs a literal, unvectorised oracle of the paper's
+Algorithm 4, and vs the generic O(M*N) selection — on exact (unbinned-lossless)
+features, all three must agree on the best heuristic score."""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fit_bins, best_splits, node_histogram, class_stats
+from repro.core.generic import generic_best_split_on_feature
+from repro.core.split import NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# literal Algorithm 3 + 4 (paper pseudocode, pure python, no vectorisation)
+# ---------------------------------------------------------------------------
+
+def paper_heuristic(pos, neg):
+    tot_p, tot_n = sum(pos), sum(neg)
+    tot = tot_p + tot_n
+    ret = 0.0
+    for p in pos:
+        if p > 0:
+            ret += p / tot * math.log(p / tot_p)
+    for n in neg:
+        if n > 0:
+            ret += n / tot * math.log(n / tot_n)
+    return ret
+
+
+def paper_best_split_on_feat(values, labels, n_classes, min_leaf=1):
+    """Algorithm 4 verbatim: values may mix numbers / strings / None."""
+    nums = sorted({v for v in values if isinstance(v, (int, float))})
+    cats = {v for v in values if isinstance(v, str)}
+    cnt_n = {(y, x): 0 for y in range(n_classes) for x in nums}
+    cnt_c = {(y, x): 0 for y in range(n_classes) for x in cats}
+    tot_n = [0] * n_classes
+    tot_c = [0] * n_classes
+    tot_y = [0] * n_classes
+    for v, y in zip(values, labels):
+        tot_y[y] += 1
+        if isinstance(v, (int, float)):
+            cnt_n[(y, v)] += 1
+            tot_n[y] += 1
+        elif isinstance(v, str):
+            cnt_c[(y, v)] += 1
+            tot_c[y] += 1
+        # None: missing — contributes only to the negative side via tot_y
+    # prefix sums over sorted numeric values
+    pfx = {}
+    for y in range(n_classes):
+        run = 0
+        for x in nums:
+            run += cnt_n[(y, x)]
+            pfx[(y, x)] = run
+    best = -float("inf")
+    for x in nums:
+        pos = [pfx[(y, x)] for y in range(n_classes)]
+        neg = [tot_y[y] - pos[y] for y in range(n_classes)]
+        if sum(pos) >= min_leaf and sum(neg) >= min_leaf:
+            best = max(best, paper_heuristic(pos, neg))
+        pos = [tot_n[y] - pfx[(y, x)] for y in range(n_classes)]
+        neg = [tot_y[y] - pos[y] for y in range(n_classes)]
+        if sum(pos) >= min_leaf and sum(neg) >= min_leaf:
+            best = max(best, paper_heuristic(pos, neg))
+    for x in cats:
+        pos = [cnt_c[(y, x)] for y in range(n_classes)]
+        neg = [tot_y[y] - pos[y] for y in range(n_classes)]
+        if sum(pos) >= min_leaf and sum(neg) >= min_leaf:
+            best = max(best, paper_heuristic(pos, neg))
+    return best
+
+
+def sfs_best_on_single_feature(values, labels, n_classes):
+    table = fit_bins([values], max_num_bins=1 << 20)   # exact mode
+    assert all(m.exact for m in table.metas)
+    bins = jnp.asarray(table.bins)
+    stats = class_stats(jnp.asarray(labels, dtype=jnp.int32), n_classes)
+    slot = jnp.zeros(len(labels), dtype=jnp.int32)
+    h = node_histogram(bins, stats, slot, num_slots=1, n_bins=table.n_bins)
+    dec = best_splits(h, jnp.asarray(table.n_num), jnp.asarray(table.n_cat))
+    return float(dec.score[0]), table, dec
+
+
+def _score_of_generic(values, labels, n_classes):
+    table = fit_bins([values], max_num_bins=1 << 20)
+    s, b, op = generic_best_split_on_feature(
+        jnp.asarray(table.bins[:, 0]), jnp.asarray(labels, dtype=jnp.int32),
+        jnp.int32(table.n_num[0]), jnp.int32(table.n_cat[0]),
+        n_classes=n_classes, n_bins=table.n_bins)
+    return float(s)
+
+
+CASES = [
+    # the paper's running example (Table 1): labels a/b/c with hybrid values
+    ([3, 4, 4, 5, "x", "x", "y",
+      1, 1, 2, 2, 3, "y", "y", "z",
+      3, 4, 4, 5, 5, "z", "z"],
+     [0] * 7 + [1] * 8 + [2] * 7, 3),
+    ([1.0, 2.0, 3.0, 4.0], [0, 0, 1, 1], 2),
+    (["a", "b", "a", "b", "a"], [0, 1, 0, 1, 0], 2),
+    ([1.0, None, 2.0, None, 3.0, "q"], [0, 1, 0, 1, 1, 1], 2),
+]
+
+
+@pytest.mark.parametrize("values,labels,c", CASES)
+def test_sfs_matches_literal_paper_oracle(values, labels, c):
+    expect = paper_best_split_on_feat(values, labels, c)
+    got, _, _ = sfs_best_on_single_feature(values, labels, c)
+    assert got == pytest.approx(expect, abs=1e-5)
+
+
+@pytest.mark.parametrize("values,labels,c", CASES)
+def test_generic_matches_superfast(values, labels, c):
+    expect, _, _ = sfs_best_on_single_feature(values, labels, c)
+    got = _score_of_generic(values, labels, c)
+    assert got == pytest.approx(expect, abs=1e-4)
+
+
+def test_paper_table4_running_example():
+    """Paper Table 4: best split on the running example is 'val <= 2' with
+    heuristic -0.87 (2-decimal rounding in the paper)."""
+    values, labels, c = CASES[0]
+    score, table, dec = sfs_best_on_single_feature(values, labels, c)
+    assert score == pytest.approx(-0.87, abs=0.005)
+    assert int(dec.op[0]) == 0                       # "<="
+    assert table.metas[0].threshold_value(int(dec.bin[0])) == 2.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_property_sfs_equals_oracle(data):
+    m = data.draw(st.integers(4, 40))
+    c = data.draw(st.integers(2, 4))
+    pool = data.draw(st.lists(
+        st.one_of(st.integers(-5, 5).map(float), st.sampled_from(["u", "v", "w"]),
+                  st.none()),
+        min_size=m, max_size=m))
+    labels = data.draw(st.lists(st.integers(0, c - 1), min_size=m, max_size=m))
+    # need at least two distinct labels for any split to be scored
+    if len(set(labels)) < 2:
+        labels[0] = (labels[1] + 1) % c
+    expect = paper_best_split_on_feat(pool, labels, c)
+    got, _, _ = sfs_best_on_single_feature(pool, labels, c)
+    if math.isinf(expect):
+        assert got < -1e30
+    else:
+        assert got == pytest.approx(expect, abs=1e-4)

@@ -1,0 +1,102 @@
+"""End-to-end UDT behaviour: purity, determinism, shape/NaN invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (fit_bins, transform, build_tree, TreeConfig,
+                        predict_bins)
+from repro.data import make_classification, make_hybrid_table
+
+
+@pytest.fixture(scope="module")
+def small():
+    cols, y = make_classification(1200, 6, 3, seed=0, n_cat_features=2,
+                                  missing_frac=0.02)
+    table = fit_bins(cols, max_num_bins=64)
+    return table, y
+
+
+def test_full_tree_fits_training_set(small):
+    table, y = small
+    tree = build_tree(table, y, TreeConfig(max_depth=64), n_classes=3)
+    pred = np.asarray(predict_bins(tree, table.bins, table.n_num))
+    # full tree without limits memorises everything separable; identical
+    # feature rows with different labels are the only irreducible errors
+    acc = (pred == y).mean()
+    assert acc > 0.95
+
+
+def test_tree_invariants(small):
+    table, y = small
+    tree = build_tree(table, y, TreeConfig(max_depth=16), n_classes=3)
+    n = tree.n_nodes
+    feat = np.asarray(tree.feat[:n]); left = np.asarray(tree.left[:n])
+    right = np.asarray(tree.right[:n]); leaf = np.asarray(tree.leaf[:n])
+    count = np.asarray(tree.count[:n]); depth = np.asarray(tree.depth[:n])
+    score = np.asarray(tree.score[:n])
+    assert count[0] == len(y)                      # root sees everything
+    assert (depth >= 1).all() and (depth <= 16).all()
+    inner = ~leaf
+    assert (left[inner] > 0).all() and (right[inner] > 0).all()
+    assert (feat[inner] >= 0).all() and (feat[inner] < table.bins.shape[1]).all()
+    assert not np.isnan(score[inner]).any()
+    # children partition the parent: count[l] + count[r] == count[parent]
+    l, r = left[inner], right[inner]
+    np.testing.assert_array_equal(count[l] + count[r], count[inner])
+    # child depth = parent depth + 1
+    np.testing.assert_array_equal(depth[l], depth[inner] + 1)
+    # every non-root node is referenced exactly once
+    refs = np.concatenate([l, r])
+    assert len(refs) == len(set(refs.tolist())) == n - 1
+
+
+def test_determinism(small):
+    table, y = small
+    cfg = TreeConfig(max_depth=12)
+    t1 = build_tree(table, y, cfg, n_classes=3)
+    t2 = build_tree(table, y, cfg, n_classes=3)
+    assert t1.n_nodes == t2.n_nodes
+    np.testing.assert_array_equal(np.asarray(t1.feat), np.asarray(t2.feat))
+    np.testing.assert_array_equal(np.asarray(t1.tbin), np.asarray(t2.tbin))
+
+
+def test_min_samples_split_respected(small):
+    table, y = small
+    tree = build_tree(table, y, TreeConfig(max_depth=64, min_samples_split=100),
+                      n_classes=3)
+    n = tree.n_nodes
+    leaf = np.asarray(tree.leaf[:n]); count = np.asarray(tree.count[:n])
+    assert (count[~leaf] >= 100).all()
+
+
+def test_max_depth_respected(small):
+    table, y = small
+    tree = build_tree(table, y, TreeConfig(max_depth=4), n_classes=3)
+    assert tree.max_tree_depth <= 4
+
+
+def test_hybrid_table_end_to_end():
+    cols, y = make_hybrid_table(600, seed=4)
+    table = fit_bins(cols)
+    tree = build_tree(table, y, TreeConfig(max_depth=32), n_classes=2)
+    pred = np.asarray(predict_bins(tree, table.bins, table.n_num))
+    assert (pred == y).mean() > 0.97     # rule is exactly recoverable
+
+
+def test_node_budget_forces_leaves(small):
+    table, y = small
+    tree = build_tree(table, y, TreeConfig(max_depth=64, max_nodes=63),
+                      n_classes=3)
+    assert tree.n_nodes <= 63
+    pred = np.asarray(predict_bins(tree, table.bins, table.n_num))
+    assert not np.isnan(pred).any()
+
+
+def test_pure_node_stops():
+    # one feature perfectly separates: tree must be a single split
+    cols = [[float(i) for i in range(100)]]
+    y = np.asarray([0] * 50 + [1] * 50, dtype=np.int32)
+    table = fit_bins(cols)
+    tree = build_tree(table, y, TreeConfig(max_depth=64), n_classes=2)
+    assert tree.n_nodes == 3
+    assert tree.max_tree_depth == 2

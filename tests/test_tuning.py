@@ -1,0 +1,82 @@
+"""Training-Only-Once Tuning: the paper's central claim is that a full tree
+pruned at predict-time with (max_depth, min_split) behaves EXACTLY like a
+tree retrained with those hyper-parameters ("the tree would be built with
+exactly the same pattern")."""
+import numpy as np
+import pytest
+
+from repro.core import (fit_bins, transform, build_tree, TreeConfig,
+                        predict_bins, tune, toot_grid, prune_stats)
+from repro.data import make_classification, make_regression, train_val_test_split
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cols, y = make_classification(3000, 8, 3, seed=7, n_cat_features=2)
+    (tr_c, tr_y), (va_c, va_y), (te_c, te_y) = train_val_test_split(cols, y)
+    table = fit_bins(tr_c, max_num_bins=64)
+    full = build_tree(table, tr_y, TreeConfig(max_depth=64), n_classes=3)
+    vb = transform(va_c, table)
+    return table, full, tr_y, vb, va_y
+
+
+def test_toot_equals_retrain(setup):
+    """For sampled grid points, predict(full_tree, dmax, smin) must equal
+    predict(retrained_tree(dmax, smin)) on the validation set."""
+    table, full, tr_y, vb, va_y = setup
+    for dmax, smin in [(3, 0), (6, 25), (10, 50), (full.max_tree_depth, 2)]:
+        p_once = np.asarray(predict_bins(full, vb, table.n_num,
+                                         max_depth=dmax,
+                                         min_samples_split=max(smin, 2)))
+        retrained = build_tree(
+            table, tr_y,
+            TreeConfig(max_depth=dmax, min_samples_split=max(smin, 2)),
+            n_classes=3)
+        p_retrain = np.asarray(predict_bins(retrained, vb, table.n_num))
+        np.testing.assert_array_equal(p_once, p_retrain)
+
+
+def test_grid_matches_pointwise_predict(setup):
+    table, full, tr_y, vb, va_y = setup
+    grid = toot_grid(full, vb, va_y, table.n_num, train_size=len(tr_y))
+    # check a handful of random cells against direct Algorithm-7 predicts
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        i = rng.integers(0, len(grid.dmax))
+        j = rng.integers(0, len(grid.smin))
+        pred = np.asarray(predict_bins(full, vb, table.n_num,
+                                       max_depth=int(grid.dmax[i]),
+                                       min_samples_split=int(grid.smin[j])))
+        acc = (pred == va_y).mean()
+        assert grid.metric[i, j] == pytest.approx(acc, abs=1e-6)
+
+
+def test_tune_improves_or_matches_full(setup):
+    table, full, tr_y, vb, va_y = setup
+    res = tune(full, vb, va_y, table.n_num, train_size=len(tr_y))
+    full_acc = (np.asarray(predict_bins(full, vb, table.n_num)) == va_y).mean()
+    assert res.best_metric >= full_acc - 1e-9
+    assert res.n_configs >= 200          # paper: ~200 min_split values alone
+
+
+def test_prune_stats_shrink(setup):
+    table, full, tr_y, vb, va_y = setup
+    res = tune(full, vb, va_y, table.n_num, train_size=len(tr_y))
+    n_full = full.n_nodes
+    n_pruned, d_pruned = prune_stats(full, res.best_dmax, res.best_smin)
+    assert n_pruned <= n_full
+    assert d_pruned <= full.max_tree_depth
+
+
+def test_toot_regression_rmse():
+    cols, y = make_regression(2000, 6, seed=3)
+    (tr_c, tr_y), (va_c, va_y), _ = train_val_test_split(cols, y)
+    table = fit_bins(tr_c, max_num_bins=64)
+    tree = build_tree(table, tr_y, TreeConfig(max_depth=32, task="regression"))
+    vb = transform(va_c, table)
+    grid = toot_grid(tree, vb, va_y, table.n_num, train_size=len(tr_y),
+                     classification=False)
+    best = grid.metric.max()
+    # tuned RMSE beats the constant (root mean) predictor
+    root_rmse = np.sqrt(((tr_y.mean() - va_y) ** 2).mean())
+    assert -best < root_rmse
