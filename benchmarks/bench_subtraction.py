@@ -1,0 +1,168 @@
+"""Sibling-subtraction benchmark: per-level histogram scatter work and
+wall-clock for the full-recompute vs smaller-child-subtraction paths.
+
+    PYTHONPATH=src python -m benchmarks.bench_subtraction [--smoke]
+
+Scatter work counts the example rows each level's histogram pass actually
+accumulates (x K features gives scatter ops): the full path scatters every
+routed example of every active node, the subtraction path only the smaller
+child of each sibling pair (the co-child is H_parent - H_small).  On a
+balanced tree every level beyond the root halves, so the build-total ratio
+approaches 2x as depth grows (>= 1.5x by depth 6).
+
+Writes BENCH_subtraction.json so the perf trajectory is tracked across PRs
+(uploaded as a CI artifact by the bench-smoke job).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import TreeConfig, build_tree, fit_bins
+from repro.data import make_classification
+
+# the one definition of the CI smoke-gate shapes (benchmarks/run.py --smoke
+# and this module's own --smoke both use it, so artifacts stay comparable)
+SMOKE = dict(m=3_000, k=6, c=3, max_depth=6, n_bins=32, onehot_m=1_500)
+
+
+def _timed_build(table, y, cfg, n_classes):
+    """Build once (warm: a prior call compiled the steps) and record the
+    wall-clock of each completed level via the level callback."""
+    times, last = [], [time.perf_counter()]
+
+    def cb(state):
+        jax.block_until_ready(state.assign)
+        now = time.perf_counter()
+        times.append(now - last[0])
+        last[0] = now
+
+    tree = build_tree(table, y, cfg, n_classes=n_classes, level_callback=cb)
+    return tree, times
+
+
+def _scatter_rows(tree, sub_cache_bytes, row_bytes):
+    """Per-level scattered example rows for both paths, from the tree.
+
+    full path: every example of every node at the level.  subtraction path:
+    the smaller child of each sibling pair, whenever the parent level's
+    histogram fit the cache budget (mirrors _grow's gating)."""
+    n = tree.n_nodes
+    depth = np.asarray(tree.depth[:n])
+    count = np.asarray(tree.count[:n])
+    left = np.asarray(tree.left[:n])
+    right = np.asarray(tree.right[:n])
+    rows = []
+    for d in range(1, int(depth.max()) + 1):
+        at = np.flatnonzero(depth == d)
+        full = int(count[at].sum())
+        parents = np.flatnonzero((depth == d - 1) & (left >= 0))
+        cached = (d > 1 and len(at) % 2 == 0
+                  and len(np.flatnonzero(depth == d - 1)) * row_bytes
+                  <= sub_cache_bytes)
+        if cached:
+            sub = int(np.minimum(count[left[parents]],
+                                 count[right[parents]]).sum())
+        else:
+            sub = full
+        rows.append(dict(depth=d, nodes=len(at), full_rows=full,
+                         sub_rows=sub,
+                         ratio=round(full / sub, 3) if sub else None))
+    return rows
+
+
+def _onehot_wallclock(table, y, c, max_depth):
+    """Wall-clock on the MXU-form backend, where histogram FLOPs scale with
+    the (packed) slot axis: M x (S*B) matmul -> M x (S/2*B).  This is the
+    TPU-relevant speedup; the CPU segment_sum backend sorts all M rows
+    whether or not they scatter, so its wall-clock barely moves."""
+    out = {}
+    for sub in (True, False):
+        cfg = TreeConfig(max_depth=max_depth, hist_backend="onehot",
+                         sibling_subtraction=sub)
+        build_tree(table, y, cfg, n_classes=c)      # warm
+        t0 = time.perf_counter()
+        build_tree(table, y, cfg, n_classes=c)
+        out["sub_ms" if sub else "full_ms"] = round(
+            (time.perf_counter() - t0) * 1e3, 1)
+    out["speedup"] = round(out["full_ms"] / max(out["sub_ms"], 1e-9), 3)
+    return out
+
+
+def run(m=20_000, k=12, c=4, max_depth=9, n_bins=64, onehot_m=8_000,
+        out="BENCH_subtraction.json"):
+    cols, y = make_classification(m, k, c, seed=0, teacher_depth=max_depth,
+                                  noise=0.02)
+    table = fit_bins(cols, max_num_bins=n_bins)
+    cfg_on = TreeConfig(max_depth=max_depth)
+    cfg_off = TreeConfig(max_depth=max_depth, sibling_subtraction=False)
+
+    # warm both paths (jit compilation), then measure
+    build_tree(table, y, cfg_on, n_classes=c)
+    build_tree(table, y, cfg_off, n_classes=c)
+    t_on, times_on = _timed_build(table, y, cfg_on, c)
+    t_off, times_off = _timed_build(table, y, cfg_off, c)
+
+    identical = (t_on.n_nodes == t_off.n_nodes and all(
+        np.array_equal(np.asarray(getattr(t_on, f)),
+                       np.asarray(getattr(t_off, f)))
+        for f in ("feat", "op", "tbin", "label", "count", "left", "right",
+                  "leaf")))
+
+    row_bytes = k * int(table.n_bins) * c * 4
+    levels = _scatter_rows(t_on, cfg_on.sub_cache_bytes, row_bytes)
+    for lv, ton, toff in zip(levels, times_on, times_off):
+        lv["sub_ms"] = round(ton * 1e3, 2)
+        lv["full_ms"] = round(toff * 1e3, 2)
+
+    oh_cols, oh_y = make_classification(onehot_m, 8, 3, seed=1,
+                                        teacher_depth=min(max_depth, 7),
+                                        noise=0.02)
+    onehot = _onehot_wallclock(fit_bins(oh_cols, max_num_bins=32), oh_y, 3,
+                               min(max_depth, 7))
+
+    total_full = sum(lv["full_rows"] for lv in levels)
+    total_sub = sum(lv["sub_rows"] for lv in levels)
+    report = dict(
+        config=dict(m=m, k=k, c=c, max_depth=max_depth, n_bins=n_bins),
+        tree_nodes=int(t_on.n_nodes), tree_depth=int(t_on.max_tree_depth),
+        trees_identical=bool(identical),
+        levels=levels,
+        total_full_rows=total_full, total_sub_rows=total_sub,
+        scatter_reduction_ratio=round(total_full / max(total_sub, 1), 3),
+        wall_sub_ms=round(sum(times_on) * 1e3, 1),
+        wall_full_ms=round(sum(times_off) * 1e3, 1),
+        wall_speedup=round(sum(times_off) / max(sum(times_on), 1e-9), 3),
+        onehot_wallclock=onehot,
+    )
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print("subtraction,depth,nodes,full_rows,sub_rows,ratio,full_ms,sub_ms")
+    for lv in levels:
+        print("subtraction,{depth},{nodes},{full_rows},{sub_rows},{ratio},"
+              "{full_ms},{sub_ms}".format(**lv))
+    print(f"subtraction_total,rows {total_full} -> {total_sub} "
+          f"({report['scatter_reduction_ratio']}x less scatter work), "
+          f"wall(segment) {report['wall_full_ms']}ms -> "
+          f"{report['wall_sub_ms']}ms ({report['wall_speedup']}x), "
+          f"wall(onehot) {onehot['full_ms']}ms -> {onehot['sub_ms']}ms "
+          f"({onehot['speedup']}x), identical={identical}, -> {out}")
+    return report
+
+
+def main():
+    if "--smoke" in sys.argv:
+        return run(**SMOKE)
+    return run()
+
+
+if __name__ == "__main__":
+    main()

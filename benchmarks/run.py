@@ -1,11 +1,13 @@
 """Benchmark orchestrator: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
 
 Prints ``name,...`` CSV per row.  --full uses paper-scale dataset sizes
 (minutes on CPU); the default is a reduced-scale pass that exercises every
-benchmark path.  Roofline rows are appended if experiments/dryrun.json
-exists (run launch/dryrun.py to regenerate)."""
+benchmark path; --smoke is the CI gate (tiny shapes, seconds: one dataset
+per roster plus the sibling-subtraction report, BENCH_*.json artifacts
+uploaded by the workflow).  Roofline rows are appended if
+experiments/dryrun.json exists (run launch/dryrun.py to regenerate)."""
 from __future__ import annotations
 
 import os
@@ -14,33 +16,49 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import bench_selection, bench_udt_cls, bench_udt_reg
-from benchmarks import bench_kernels
+from benchmarks import bench_kernels, bench_subtraction
 
 
 def main() -> None:
     full = "--full" in sys.argv
+    smoke = "--smoke" in sys.argv
     scale = 1.0 if full else 0.1
 
     print("# paper Table 5 — selection scaling (us per call)")
-    bench_selection.run(sizes=(2_000, 4_000, 8_000, 16_000) if not full
-                        else (10_000, 25_000, 50_000, 100_000))
+    if smoke:
+        bench_selection.run(sizes=(1_000, 2_000))
+    else:
+        bench_selection.run(sizes=(2_000, 4_000, 8_000, 16_000) if not full
+                            else (10_000, 25_000, 50_000, 100_000))
 
     print("# paper Table 6 — UDT classification roster (synthetic re-gen)")
     print("udt_cls,name,m,k,c,full_nodes,full_depth,train_ms,tune_ms,"
           "n_configs,acc,tuned_nodes,tuned_depth,retrain_ms,naive_tune_est_ms")
-    roster = bench_udt_cls.ROSTER if full else bench_udt_cls.ROSTER[:4]
+    roster = (bench_udt_cls.ROSTER[:1] if smoke
+              else bench_udt_cls.ROSTER if full else bench_udt_cls.ROSTER[:4])
     for name in roster:
-        bench_udt_cls.run_one(name, scale=scale if not full else 1.0)
+        bench_udt_cls.run_one(name, scale=1.0 if full else scale)
 
     print("# paper Table 7 — UDT regression roster")
     print("udt_reg,name,m,k,full_nodes,full_depth,train_ms,tune_ms,"
           "n_configs,mae,rmse")
-    roster = bench_udt_reg.ROSTER if full else bench_udt_reg.ROSTER[:2]
+    roster = (bench_udt_reg.ROSTER[:1] if smoke
+              else bench_udt_reg.ROSTER if full else bench_udt_reg.ROSTER[:2])
     for name in roster:
-        bench_udt_reg.run_one(name, scale=scale if not full else 1.0)
+        bench_udt_reg.run_one(name, scale=1.0 if full else scale)
 
-    print("# kernel micro-bench")
-    bench_kernels.main()
+    print("# sibling histogram subtraction (writes BENCH_subtraction.json)")
+    if smoke:
+        bench_subtraction.run(**bench_subtraction.SMOKE)
+    elif full:
+        bench_subtraction.run()
+    else:   # reduced-scale default, like the roster benches above
+        bench_subtraction.run(m=8_000, k=8, c=3, max_depth=7,
+                              onehot_m=3_000)
+
+    if not smoke:
+        print("# kernel micro-bench")
+        bench_kernels.main()
 
     if os.path.exists("experiments/dryrun.json"):
         print("# roofline (from experiments/dryrun.json)")

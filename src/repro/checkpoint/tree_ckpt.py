@@ -6,7 +6,13 @@ level boundaries through the ``level_callback`` hook, restartable with
 Node failure story at pod scale: the build is deterministic given the
 binned table, so a restarted worker set replays from the last completed
 level; stragglers are bounded because per-level work is fixed-shape
-(B bins x S slots regardless of data skew)."""
+(B bins x S slots regardless of data skew).
+
+The sibling-subtraction histogram cache (BuildState.phist) is deliberately
+NOT persisted: it is pure derived state, and a resumed build simply
+recomputes its first level's histograms in full before re-entering the
+subtraction fast path -- bit-identical for classification, so the
+resume-equivalence contract (tests/test_checkpoint.py) is unchanged."""
 from __future__ import annotations
 
 import json

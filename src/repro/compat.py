@@ -1,0 +1,32 @@
+"""Small version-compatibility shims.
+
+The code targets current jax (``jax.shard_map``, ``check_vma``); CI and the
+dev container may pin an older 0.4.x release where the API still lives in
+``jax.experimental.shard_map`` with the ``check_rep`` spelling.  Every
+shard_map in this repo disables replication checking (tree arrays are
+replicated by construction and the histogram psum guarantees it), so the
+shim bakes that in.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map_norep", "axis_size"]
+
+
+def axis_size(axis_name):
+    """jax.lax.axis_size, or the psum(1) spelling on older jax."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+if hasattr(jax, "shard_map"):
+    def shard_map_norep(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:                                        # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map_norep(f, *, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)

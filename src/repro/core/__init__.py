@@ -11,7 +11,9 @@ from repro.core.binning import (  # noqa: F401
     BinnedTable, FeatureMeta, fit_bins, transform, fit_label_classes,
 )
 from repro.core.heuristics import HEURISTICS  # noqa: F401
-from repro.core.histogram import node_histogram, class_stats, moment_stats  # noqa: F401
+from repro.core.histogram import (node_histogram,  # noqa: F401
+                                  node_histogram_smaller_child,
+                                  class_stats, moment_stats)
 from repro.core.split import (  # noqa: F401
     best_splits, evaluate_predicate, SplitDecision, OP_LE, OP_GT, OP_EQ,
 )

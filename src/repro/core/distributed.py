@@ -30,9 +30,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map_norep
 from repro.core.binning import BinnedTable
 from repro.core.tree import (Tree, TreeConfig, _auto_chunk_slots, _chunk_step,
-                             _grow, _init_arrays, _prepare, _route_step)
+                             _grow, _init_arrays, _prepare, _route_step,
+                             _subtract_eligible)
 
 __all__ = ["DistConfig", "build_tree_distributed", "make_sharded_step"]
 
@@ -41,6 +43,13 @@ __all__ = ["DistConfig", "build_tree_distributed", "make_sharded_step"]
 class DistConfig:
     data_axes: tuple = ("data",)       # example-sharding mesh axes
     model_axis: str | None = "model"   # feature-sharding mesh axis (or None)
+    # Two exclusive ways to shrink the per-level histogram collective:
+    #   slot_scatter  -- reduce_scatter the [S,K,B,C] chunk over the slot
+    #                    axis (half the bytes of a ring all-reduce);
+    #   sibling subtraction (TreeConfig.sibling_subtraction) -- psum only
+    #    the packed smaller-child histogram ([S/2,K,B,C]: half the bytes
+    #    AND half the scatter work), parent cache sharded over the feature
+    #    axis.  When slot_scatter is on it wins and subtraction is disabled.
     slot_scatter: bool = True          # reduce_scatter histograms over slots
 
 
@@ -55,8 +64,15 @@ def _pad_to(x, mult, axis, fill):
 
 
 def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
-                      k_pad: int, c: int, max_nodes: int, num_slots: int):
+                      k_pad: int, c: int, max_nodes: int, num_slots: int,
+                      use_sub: bool = False, want_hist: bool = False):
     """Build the shard_map'd level-chunk step for a given slot count.
+
+    ``use_sub`` / ``want_hist`` select the sibling-subtraction variants: the
+    parent histogram rows come in (and the cached level histogram goes out)
+    sharded over the feature axis, so the cache memory scales with K/f_shards
+    per device and the per-level psum covers only the packed smaller-child
+    histogram.
 
     This is also what launch/dryrun.py lowers for the UDT rows of the
     roofline table (the paper-technique cell)."""
@@ -64,14 +80,15 @@ def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
     fspec = P(None, dist.model_axis)   # [M, K] -> features on model axis
     rep = P()
 
-    scatter_ok = dist.slot_scatter and num_slots % max(
-        1, int(np.prod([mesh.shape[a] for a in dist.data_axes]))) == 0
+    scatter_ok = (dist.slot_scatter and not use_sub and num_slots % max(
+        1, int(np.prod([mesh.shape[a] for a in dist.data_axes]))) == 0)
     step_kw = dict(kw, num_slots=num_slots, data_axes=dist.data_axes,
-                   model_axis=dist.model_axis, slot_scatter=scatter_ok)
+                   model_axis=dist.model_axis, slot_scatter=scatter_ok,
+                   use_sub=use_sub, want_hist=want_hist)
 
-    def body(bins, stats, lbins, yv, assign, arrays, n_num, n_cat,
+    def body(bins, stats, lbins, yv, assign, arrays, pp, n_num, n_cat,
              cs, cn, nf, depth):
-        return _chunk_step(bins, stats, lbins, yv, assign, arrays, n_num,
+        return _chunk_step(bins, stats, lbins, yv, assign, arrays, pp, n_num,
                            n_cat, cs, cn, nf, depth, **step_kw)
 
     in_specs = (P(dist.data_axes, dist.model_axis),  # bins [M,K]
@@ -80,11 +97,13 @@ def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
                 dspec,                               # yv [M]
                 dspec,                               # assign [M]
                 rep,                                 # tree arrays (replicated)
+                fspec if use_sub else rep,           # parent hist pairs
                 P(dist.model_axis),                  # n_num [K]
                 P(dist.model_axis),                  # n_cat [K]
                 rep, rep, rep, rep)                  # scalars
-    sharded = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                            out_specs=(rep, rep), check_vma=False)
+    out_specs = (rep, rep, fspec if want_hist else rep)
+    sharded = shard_map_norep(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs)
     return jax.jit(sharded)
 
 
@@ -95,9 +114,8 @@ def make_sharded_route(mesh: Mesh, dist: DistConfig):
 
     in_specs = (P(dist.data_axes, dist.model_axis), P(dist.data_axes),
                 P(), P(dist.model_axis), P(), P())
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                                 out_specs=P(dist.data_axes),
-                                 check_vma=False))
+    return jax.jit(shard_map_norep(body, mesh=mesh, in_specs=in_specs,
+                                   out_specs=P(dist.data_axes)))
 
 
 def build_tree_distributed(table: BinnedTable, y,
@@ -157,13 +175,29 @@ def build_tree_distributed(table: BinnedTable, y,
 
     step_cache: dict = {}
     route_fn = make_sharded_route(mesh, dist)
+    dummy_pp = jnp.zeros((1, 1, 1, 1), dtype=jnp.float32)
 
-    def step(arrays, assign, cs, cn, next_free, depth, num_slots):
-        if num_slots not in step_cache:
-            step_cache[num_slots] = make_sharded_step(
-                mesh, dist, kw, m_pad, k_pad, c, max_nodes, num_slots)
-        return step_cache[num_slots](
-            bins_d, stats_d, lbins_d, yv_d, assign, arrays, n_num_d, n_cat_d,
+    # sibling subtraction halves both scatter work and psum bytes, but its
+    # parent cache lives on the full slot axis -- mutually exclusive with
+    # an EFFECTIVE slot_scatter (the reduce_scatter only happens when there
+    # are data axes; feature-only meshes keep subtraction).  The cache is
+    # sharded over the feature axis, so the budget gate uses per-device row
+    # bytes.
+    subtract = (((k_pad // f_shards) * b * c * 4, config.sub_cache_bytes)
+                if (_subtract_eligible(config, m)
+                    and not (dist.slot_scatter and dist.data_axes))
+                else None)
+
+    def step(arrays, assign, cs, cn, next_free, depth, num_slots, pp,
+             use_sub, want_hist):
+        key = (num_slots, use_sub, want_hist)
+        if key not in step_cache:
+            step_cache[key] = make_sharded_step(
+                mesh, dist, kw, m_pad, k_pad, c, max_nodes, num_slots,
+                use_sub, want_hist)
+        return step_cache[key](
+            bins_d, stats_d, lbins_d, yv_d, assign, arrays,
+            pp if use_sub else dummy_pp, n_num_d, n_cat_d,
             jnp.int32(cs), jnp.int32(cn), jnp.int32(next_free),
             jnp.int32(depth))
 
@@ -172,5 +206,6 @@ def build_tree_distributed(table: BinnedTable, y,
                         jnp.int32(end))
 
     arrays, n_nodes = _grow(step, route, arrays, assign, s_cap, max_nodes,
-                            level_callback)
+                            level_callback, subtract=subtract,
+                            max_depth=config.max_depth)
     return Tree(n_nodes=n_nodes, **arrays)

@@ -10,6 +10,11 @@ drop out of the same machinery:
     binned table and one compiled step.
   * GradientBoostedTrees: regression trees on residuals (variance mode),
     i.e. the XGBoost-hist structure with the paper's selection inside.
+
+Both ensembles go through ``build_tree`` unchanged, so they inherit the
+sibling-subtraction fast path (TreeConfig.sibling_subtraction, on by
+default): per-tree histogram scatter work drops >= 2x per level, which
+multiplies across the whole ensemble.
 """
 from __future__ import annotations
 

@@ -15,6 +15,13 @@ Backends:
                    transfer; a (B x Mt)@(Mt x C) matmul does)
   * ``pallas``   - tiled Pallas kernel implementing the onehot form in VMEM
                    (kernels/histogram.py)
+
+``node_histogram_smaller_child`` is the sibling-subtraction entry point
+(LightGBM's histogram trick in level-synchronous form): the tree builder
+scatters statistics only for the smaller child of every split pair and
+derives the co-child as ``H_parent - H_small``.  Skipped slots are never
+materialised -- the pair axis is *packed*, so the scatter target (and the
+per-level collective in the distributed build) is half the size.
 """
 from __future__ import annotations
 
@@ -23,7 +30,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["node_histogram", "class_stats", "moment_stats"]
+__all__ = ["node_histogram", "node_histogram_smaller_child", "class_stats",
+           "moment_stats"]
 
 
 def class_stats(labels: jax.Array, n_classes: int) -> jax.Array:
@@ -89,3 +97,40 @@ def node_histogram(bins: jax.Array, stats: jax.Array, slot: jax.Array, *,
       H: [num_slots, K, n_bins, C] float32.
     """
     return _BACKENDS[backend](bins, stats, slot, num_slots, n_bins)
+
+
+@functools.partial(jax.jit, static_argnames=("num_slots", "n_bins", "backend"))
+def node_histogram_smaller_child(bins: jax.Array, stats: jax.Array,
+                                 slot: jax.Array, compute: jax.Array, *,
+                                 num_slots: int, n_bins: int,
+                                 backend: str = "segment") -> jax.Array:
+    """Scatter statistics only for the per-pair "compute me" child slots.
+
+    The level-synchronous builder allocates children in sibling pairs at
+    slots ``(2j, 2j+1)``.  ``compute`` is a [num_slots] bool mask selecting
+    exactly one slot of each pair (the child with fewer routed examples);
+    rows whose slot is masked out are dropped, and the computed child of
+    pair ``j`` lands in *packed* slot ``j``.
+
+    Returns:
+      H_small: [num_slots // 2, K, n_bins, C] float32 -- the histogram of
+      the computed (smaller) child of each pair.  The caller derives the
+      sibling as ``H_parent[j] - H_small[j]``; for integer-count channels
+      (classification one-hots, moment channel 0) the subtraction is exact
+      in float32 below 2**24 examples, so the derived histogram is
+      bit-identical to a full recompute.  Float moment channels (sum_y,
+      sum_y2) agree to accumulation-order tolerance.
+    """
+    if num_slots % 2:
+        raise ValueError("pair packing needs an even slot count")
+    slot_map = jnp.where(compute, jnp.arange(num_slots, dtype=jnp.int32) // 2,
+                         -1)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        # in-kernel remap: the [M] slot vector is never rewritten in HBM and
+        # skipped slots occupy no VMEM (the output block is the packed axis).
+        return kops.histogram(bins, stats, slot, num_slots=num_slots // 2,
+                              n_bins=n_bins, slot_map=slot_map)
+    packed = jnp.where(slot >= 0,
+                       slot_map[jnp.clip(slot, 0, num_slots - 1)], -1)
+    return _BACKENDS[backend](bins, stats, packed, num_slots // 2, n_bins)

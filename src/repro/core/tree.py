@@ -4,9 +4,12 @@ The paper grows the tree with a node queue and filters per-feature sorted
 value lists down the tree.  The TPU-native formulation grows the tree
 **breadth-first, one level per step**: every level performs
 
-  1. ONE histogram pass over all M examples (Superfast statistics
-     collection, O(M*K) scatter work) -- chunked over node slots so the
-     [S, K, B, C] working set stays bounded (VMEM-sized on TPU),
+  1. ONE histogram pass (Superfast statistics collection, O(M*K) scatter
+     work) -- chunked over node slots so the [S, K, B, C] working set stays
+     bounded (VMEM-sized on TPU).  With sibling subtraction (the default)
+     the pass touches only the examples of the SMALLER child of each split
+     pair; the co-child's histogram is derived from the cached parent level
+     as H_parent - H_small, cutting per-level scatter work >= 2x,
   2. prefix-sum split selection for every active node at once (O(S*K*B*C)),
   3. ONE routing pass updating each example's node assignment (O(M)).
 
@@ -29,9 +32,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import split as split_mod
 from repro.core.binning import BinnedTable
-from repro.core.histogram import node_histogram, class_stats, moment_stats
+from repro.core.histogram import (node_histogram,
+                                  node_histogram_smaller_child,
+                                  class_stats, moment_stats)
 from repro.core.split import best_splits, evaluate_predicate, NEG_INF
 
 __all__ = ["TreeConfig", "Tree", "build_tree", "BuildState"]
@@ -51,6 +57,16 @@ class TreeConfig:
     select_backend: str = "jnp"       # "jnp" | "pallas" (fused split-scan)
     hist_budget_bytes: int = 1 << 28  # bounds the [S,K,B,C] chunk
     chunk_slots: int = 0              # 0 -> auto from hist_budget_bytes
+    # Sibling histogram subtraction (LightGBM's trick, level-synchronous):
+    # cache the previous level's H[S,K,B,C], scatter only the smaller child
+    # of each split pair and derive the co-child as H_parent - H_small --
+    # >= 2x less per-level scatter work on balanced trees.  Bit-exact for
+    # classification (integer counts in f32 below 2**24 examples); float
+    # moment channels agree to accumulation-order tolerance.  The label-split
+    # "regression" task recomputes its per-level pseudo-class statistics, so
+    # subtraction does not apply there.
+    sibling_subtraction: bool = True
+    sub_cache_bytes: int = 1 << 28    # skip caching levels wider than this
 
 
 class Tree(NamedTuple):
@@ -65,6 +81,7 @@ class Tree(NamedTuple):
     left: jax.Array      # i32 child id or -1
     right: jax.Array     # i32 child id or -1
     leaf: jax.Array      # bool
+    parent: jax.Array    # i32 parent id, -1 for the root
     n_nodes: int
 
     @property
@@ -74,13 +91,21 @@ class Tree(NamedTuple):
 
 
 class BuildState(NamedTuple):
-    """Per-level resumable build state (fault-tolerance checkpoint unit)."""
+    """Per-level resumable build state (fault-tolerance checkpoint unit).
+
+    ``phist`` / ``phist_base`` carry the completed level's full histogram
+    chunks (concatenated to [level_width, K, B, C], base node id
+    ``phist_base``) so a resumed build can keep using sibling subtraction.
+    They are optional: resuming without them just recomputes the first
+    level's histograms in full (bit-identical for classification)."""
     arrays: dict
     assign: jax.Array
     level_start: int
     level_end: int
     next_free: int
     depth: int
+    phist: jax.Array | None = None
+    phist_base: int = -1
 
 
 def _auto_chunk_slots(k: int, b: int, c: int, budget: int) -> int:
@@ -95,7 +120,7 @@ def _init_arrays(max_nodes: int):
         score=jnp.full((max_nodes,), NEG_INF, dtype=jnp.float32),
         label=jnp.zeros((max_nodes,), dtype=jnp.float32),
         count=i32(0), depth=i32(0), left=i32(-1), right=i32(-1),
-        leaf=jnp.zeros((max_nodes,), dtype=bool),
+        leaf=jnp.zeros((max_nodes,), dtype=bool), parent=i32(-1),
     )
 
 
@@ -136,22 +161,34 @@ def _label_split_thresholds(lhist):
                      "min_samples_split", "min_samples_leaf", "max_depth",
                      "max_nodes", "hist_backend", "select_backend",
                      "n_label_bins", "data_axes", "model_axis",
-                     "slot_scatter"))
-def _chunk_step(bins, stats, lbins, y, assign, arrays, n_num, n_cat,
-                chunk_start, chunk_n, next_free, depth, *,
+                     "slot_scatter", "use_sub", "want_hist"))
+def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
+                n_cat, chunk_start, chunk_n, next_free, depth, *,
                 num_slots, n_bins, heuristic, task, min_samples_split,
                 min_samples_leaf, max_depth, max_nodes, hist_backend,
                 select_backend, n_label_bins, data_axes=(), model_axis=None,
-                slot_scatter=False):
+                slot_scatter=False, use_sub=False, want_hist=False):
     """Process node slots [chunk_start, chunk_start+chunk_n).
 
-    Returns (arrays, n_children).  All shapes static; chunk_start / chunk_n /
-    next_free / depth are dynamic scalars so one compilation serves the
-    whole build.
+    Returns (arrays, n_children, hist).  All shapes static; chunk_start /
+    chunk_n / next_free / depth are dynamic scalars so one compilation
+    serves the whole build.
+
+    ``use_sub`` enables sibling subtraction: ``phist_pairs`` holds the
+    parent histogram of sibling pair ``j = slot // 2`` ([num_slots//2, K, B,
+    C], gathered by ``_parent_rows``), statistics are scattered only for
+    the smaller child of each pair, and the co-child's histogram is
+    ``H_parent - H_small`` -- branch-free under jit.  ``want_hist`` returns
+    the chunk's full histogram so the build loop can cache it for the next
+    level (a scalar 0 otherwise).
     """
     s = num_slots
     k_local = bins.shape[1]
     scatter_on = bool(slot_scatter and data_axes)
+    # subtraction scatters a *packed* pair axis; slot_scatter shards the
+    # full slot axis -- the two collective-halving modes are exclusive.
+    assert not (use_sub and scatter_on)
+    assert not use_sub or task in ("classification", "regression_variance")
 
     def reduce_data(x):
         """Data-parallel histogram reduction.
@@ -197,7 +234,7 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, n_num, n_cat,
         # distributed build reproduces the local tree bit-for-bit —
         # histogram counts are integers, hence psum-order independent.
         my = jax.lax.axis_index(model_axis)
-        n_shards = jax.lax.axis_size(model_axis)
+        n_shards = compat.axis_size(model_axis)
         k_tot = k_local * n_shards
         feat_g = dec.feat + my * k_local
         flat_idx = (dec.op * k_tot + feat_g) * n_bins + dec.bin   # global order
@@ -222,6 +259,34 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, n_num, n_cat,
     in_chunk = slot_ids < chunk_n
     node_ids = jnp.where(in_chunk, chunk_start + slot_ids, max_nodes)
 
+    def build_hist(stats_rows):
+        """One level-chunk histogram: full scatter, or smaller-child scatter
+        plus sibling subtraction when the parent cache is available."""
+        if not use_sub:
+            return reduce_data(node_histogram(
+                bins, stats_rows, slot, num_slots=s, n_bins=n_bins,
+                backend=hist_backend))
+        # per-node routed-example counts decide which child to scatter; the
+        # psum makes the argmin globally consistent across data shards.
+        cnt = jax.ops.segment_sum(jnp.ones_like(slot, dtype=jnp.float32),
+                                  slot, num_segments=s)
+        for ax in data_axes:
+            cnt = jax.lax.psum(cnt, ax)
+        small_is_left = cnt[0::2] <= cnt[1::2]               # [s/2]
+        compute = jnp.stack([small_is_left, ~small_is_left],
+                            axis=1).reshape(s)
+        h_small = reduce_data(node_histogram_smaller_child(
+            bins, stats_rows, slot, compute, num_slots=s, n_bins=n_bins,
+            backend=hist_backend))                           # [s/2,K,B,C]
+        # slots past chunk_n have no parent row; their lanes carry garbage
+        # that every downstream write drops (node_ids == max_nodes there).
+        h_der = phist_pairs - h_small
+        sl = small_is_left[:, None, None, None]
+        return jnp.stack([jnp.where(sl, h_small, h_der),
+                          jnp.where(sl, h_der, h_small)],
+                         axis=1).reshape(s, k_local, n_bins,
+                                         stats_rows.shape[-1])
+
     if task == "regression":
         # Algorithm 6: per-node label split -> per-example pseudo class.
         lhist = reduce_data(node_histogram(
@@ -233,16 +298,12 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, n_num, n_cat,
         stats = class_stats(pseudo, 2)
         count = count_f.astype(jnp.int32)
         pure = sse <= 1e-10 * jnp.maximum(count_f, 1.0)
-        hist = reduce_data(node_histogram(bins, stats, slot, num_slots=s,
-                                          n_bins=n_bins,
-                                          backend=hist_backend))
+        hist = build_hist(stats)
         dec = select(hist, n_num, n_cat, heuristic=heuristic,
                      min_leaf=min_samples_leaf)
         dec = regather(dec)
     elif task == "regression_variance":
-        hist = reduce_data(node_histogram(bins, moment_stats(y), slot,
-                                          num_slots=s, n_bins=n_bins,
-                                          backend=hist_backend))
+        hist = build_hist(moment_stats(y))
         tot = hist[:, 0].sum(axis=1)                                # [S,3]
         count_f = tot[:, 0]
         safe = jnp.where(count_f > 0, count_f, 1.0)
@@ -253,9 +314,7 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, n_num, n_cat,
                      min_leaf=min_samples_leaf)
         count, label, pure, dec = regather((count, label, pure, dec))
     else:
-        hist = reduce_data(node_histogram(bins, stats, slot, num_slots=s,
-                                          n_bins=n_bins,
-                                          backend=hist_backend))
+        hist = build_hist(stats)
         tot = hist[:, 0].sum(axis=1)                                # [S,C]
         count = tot.sum(-1).astype(jnp.int32)
         label = jnp.argmax(tot, axis=-1).astype(jnp.float32)
@@ -285,6 +344,11 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, n_num, n_cat,
     def upd(name, vals, ids=node_ids):
         arrays[name] = arrays[name].at[ids].set(vals, mode="drop")
 
+    # child -> parent back-pointers: next level's sibling subtraction gathers
+    # each pair's parent histogram row through these.
+    for child in (left, right):
+        upd("parent", node_ids, ids=jnp.where(wants_split, child, max_nodes))
+
     upd("feat", jnp.where(wants_split, dec.feat, -1))
     upd("op", jnp.where(wants_split, dec.op, -1))
     upd("tbin", jnp.where(wants_split, dec.bin, -1))
@@ -295,7 +359,8 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, n_num, n_cat,
     upd("left", left)
     upd("right", right)
     upd("leaf", is_leaf)
-    return arrays, n_children
+    hist_out = hist if want_hist else jnp.zeros((), dtype=jnp.float32)
+    return arrays, n_children, hist_out
 
 
 @functools.partial(jax.jit, static_argnames=("model_axis",))
@@ -361,30 +426,87 @@ def _prepare(table: BinnedTable, y, config: TreeConfig,
     return bins, stats, lbins, yv, c, n_label_bins
 
 
+def _subtract_eligible(config: TreeConfig, m: int) -> bool:
+    """Single source of truth for the sibling-subtraction gate (the local
+    and distributed builders must agree or their bit-identical-tree
+    contract breaks).  The label-split "regression" task recomputes its
+    pseudo-class statistics every level, so the parent cache is invalid;
+    past 2**24 examples float32 integer-count accumulation can round, so
+    the derived sibling would no longer be bit-identical to a recompute."""
+    return (config.sibling_subtraction and config.task != "regression"
+            and m < 1 << 24)
+
+
+def _parent_rows(parent, cache, cs, s):
+    """Gather each sibling pair's parent histogram row for one level chunk.
+
+    ``cache`` is (base_node_id, H[level_width, K, B, C]) of the previous
+    level.  Pairs past the chunk's valid region gather garbage rows; every
+    consumer of those slots drops its writes, so no masking is needed."""
+    base, hist = cache
+    pid = jnp.take(parent,
+                   jnp.int32(cs) + jnp.arange(0, s, 2, dtype=jnp.int32),
+                   mode="fill", fill_value=-1)
+    idx = jnp.clip(pid - base, 0, hist.shape[0] - 1)
+    return hist[idx]
+
+
 def _grow(step, route, arrays, assign, s_cap, max_nodes, level_callback,
-          cursors=(0, 1, 1, 1)):
+          cursors=(0, 1, 1, 1), subtract=None, cache=None,
+          max_depth=1 << 30):
     """The level-synchronous queue (paper Algorithm 5), host-driven.
 
-    ``step(arrays, assign, cs, cn, next_free, depth, num_slots)`` returns
-    (arrays, n_children); ``route(assign, arrays, start, end)`` returns the
-    new per-example node assignment.  ``cursors`` resumes a checkpointed
-    build from the start of a level (fault tolerance)."""
+    ``step(arrays, assign, cs, cn, next_free, depth, num_slots, phist_pairs,
+    use_sub, want_hist)`` returns (arrays, n_children, hist); ``route(assign,
+    arrays, start, end)`` returns the new per-example node assignment.
+    ``cursors`` resumes a checkpointed build from the start of a level
+    (fault tolerance).
+
+    ``subtract = (row_bytes, budget)`` enables sibling subtraction:
+    each level's full histogram is cached (unless wider than
+    ``budget / row_bytes`` slots) and the next level scatters only the
+    smaller child of each split pair.  ``cache`` seeds the parent-level
+    histogram when resuming."""
     level_start, level_end, next_free, depth = cursors
     while level_start < level_end:
+        width = level_end - level_start
         # slot count adapts to the frontier (bounded by the VMEM/HBM
         # budget); jit caches one compilation per power-of-two size.
-        s = min(s_cap, max(16, 1 << (level_end - level_start - 1).bit_length()))
+        s = min(s_cap, max(16, 1 << (width - 1).bit_length()))
+        # children are allocated in sibling pairs at (level_start + 2j,
+        # level_start + 2j + 1); with even s and chunks starting at
+        # level_start + i*s, pairs never straddle a chunk.  An odd s_cap
+        # (user chunk_slots / unlucky auto budget) would misalign them, so
+        # round down; only the root level (width 1, no parent) and a
+        # degenerate s == 1 fall outside the pair layout.
+        if subtract is not None and s % 2 and s > 1:
+            s -= 1
+        paired = s % 2 == 0
+        use = (subtract is not None and cache is not None and paired
+               and width % 2 == 0)
+        # depth >= max_depth forces every node here to a leaf, so this
+        # level has no children and caching its histogram would be wasted
+        want = (subtract is not None and paired and depth < max_depth
+                and width * subtract[0] <= subtract[1])
+        hists = []
         for cs in range(level_start, level_end, s):
             cn = min(s, level_end - cs)
-            arrays, n_children = step(arrays, assign, cs, cn, next_free,
-                                      depth, s)
+            pp = _parent_rows(arrays["parent"], cache, cs, s) if use else None
+            arrays, n_children, h = step(arrays, assign, cs, cn, next_free,
+                                         depth, s, pp, use, want)
             next_free += int(n_children)
+            if want:
+                hists.append(h)
+        cache = ((level_start, jnp.concatenate(hists, axis=0)[:width])
+                 if want else None)
         assign = route(assign, arrays, level_start, level_end)
         level_start, level_end = level_end, next_free
         depth += 1
         if level_callback is not None:
-            level_callback(BuildState(arrays, assign, level_start,
-                                      level_end, next_free, depth))
+            level_callback(BuildState(
+                arrays, assign, level_start, level_end, next_free, depth,
+                cache[1] if cache is not None else None,
+                cache[0] if cache is not None else -1))
     return arrays, next_free
 
 
@@ -408,15 +530,21 @@ def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
     max_nodes = config.max_nodes or min(2 * m + 1, 1 << 22)
     s_cap = config.chunk_slots or _auto_chunk_slots(
         k, b, c, config.hist_budget_bytes)
+    cache = None
     if resume is not None:
         arrays = {k_: jnp.asarray(v) for k_, v in resume.arrays.items()}
         assign = jnp.asarray(resume.assign)
         cursors = (resume.level_start, resume.level_end, resume.next_free,
                    resume.depth)
+        if resume.phist is not None:
+            cache = (resume.phist_base, jnp.asarray(resume.phist))
     else:
         arrays = _init_arrays(max_nodes)
         assign = jnp.zeros((m,), dtype=jnp.int32)
         cursors = (0, 1, 1, 1)
+
+    subtract = ((k * b * c * 4, config.sub_cache_bytes)
+                if _subtract_eligible(config, m) else None)
 
     kw = dict(n_bins=b, heuristic=config.heuristic, task=config.task,
               min_samples_split=config.min_samples_split,
@@ -425,17 +553,22 @@ def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
               hist_backend=config.hist_backend,
               select_backend=config.select_backend,
               n_label_bins=n_label_bins)
+    dummy_pp = jnp.zeros((1, 1, 1, 1), dtype=jnp.float32)
 
-    def step(arrays, assign, cs, cn, next_free, depth, num_slots):
-        return _chunk_step(bins, stats, lbins, yv, assign, arrays, n_num,
+    def step(arrays, assign, cs, cn, next_free, depth, num_slots, pp,
+             use_sub, want_hist):
+        return _chunk_step(bins, stats, lbins, yv, assign, arrays,
+                           pp if use_sub else dummy_pp, n_num,
                            n_cat, jnp.int32(cs), jnp.int32(cn),
                            jnp.int32(next_free), jnp.int32(depth),
-                           num_slots=num_slots, **kw)
+                           num_slots=num_slots, use_sub=use_sub,
+                           want_hist=want_hist, **kw)
 
     def route(assign, arrays, start, end):
         return _route_step(bins, assign, arrays, n_num, jnp.int32(start),
                            jnp.int32(end))
 
     arrays, n_nodes = _grow(step, route, arrays, assign, s_cap, max_nodes,
-                            level_callback, cursors)
+                            level_callback, cursors, subtract=subtract,
+                            cache=cache, max_depth=config.max_depth)
     return Tree(n_nodes=n_nodes, **arrays)

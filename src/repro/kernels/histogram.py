@@ -33,9 +33,10 @@ __all__ = ["histogram_pallas", "DEFAULT_EXAMPLE_TILE"]
 DEFAULT_EXAMPLE_TILE = 512
 
 
-def _hist_kernel(bins_ref, stats_t_ref, slot_ref, out_ref, *,
+def _hist_kernel(bins_ref, stats_t_ref, slot_ref, *refs,
                  n_bins: int, slot_chunk: int, m_total: int,
                  example_tile: int):
+    *maybe_remap, out_ref = refs
     k_i = pl.program_id(0)      # feature        (unused: blocks pre-sliced)
     sc = pl.program_id(1)       # slot chunk
     t = pl.program_id(2)        # example tile (innermost, sequential)
@@ -48,6 +49,16 @@ def _hist_kernel(bins_ref, stats_t_ref, slot_ref, out_ref, *,
     bins = bins_ref[0, :]                                    # [Mt] i32
     slot = slot_ref[:]                                       # [Mt] i32
     stats_t = stats_t_ref[...]                               # [C, Mt] f32
+
+    if maybe_remap:
+        # masked-slot remap (sibling subtraction): slot ids are first mapped
+        # through the [S_in] table; -1 entries drop the row, so skipped
+        # sibling slots never touch the onehot tile or the VMEM output
+        # block.  The full-histogram path skips the gather entirely.
+        remap = maybe_remap[0][:]                            # [S_in] i32
+        n_in = remap.shape[0]
+        mapped = jnp.take(remap, jnp.clip(slot, 0, n_in - 1))
+        slot = jnp.where((slot >= 0) & (slot < n_in), mapped, -1)
 
     row = t * example_tile + jax.lax.iota(jnp.int32, example_tile)
     local = slot - sc * slot_chunk
@@ -67,8 +78,15 @@ def _hist_kernel(bins_ref, stats_t_ref, slot_ref, out_ref, *,
     "num_slots", "n_bins", "slot_chunk", "example_tile", "interpret"))
 def histogram_pallas(bins, stats, slot, *, num_slots: int, n_bins: int,
                      slot_chunk: int = 16, example_tile: int = DEFAULT_EXAMPLE_TILE,
-                     interpret: bool = True):
-    """bins [M,K] i32, stats [M,C] f32, slot [M] i32 -> H [S,K,B,C] f32."""
+                     interpret: bool = True, slot_map=None):
+    """bins [M,K] i32, stats [M,C] f32, slot [M] i32 -> H [S,K,B,C] f32.
+
+    ``slot_map`` (optional [S_in] i32) remaps raw slot ids in-kernel: entry
+    ``-1`` drops the row, entries must land in [0, num_slots).  The sibling-
+    subtraction builder uses this to pack the computed child of each split
+    pair into half as many output slots without rewriting the [M] slot
+    vector in HBM.  ``None`` is the identity over [0, num_slots).
+    """
     m, k = bins.shape
     c = stats.shape[-1]
     n_sc = -(-num_slots // slot_chunk)
@@ -79,20 +97,27 @@ def histogram_pallas(bins, stats, slot, *, num_slots: int, n_bins: int,
     stats_t = jnp.pad(stats, ((0, m_pad - m), (0, 0))).T     # [C, Mp]
     slot_p = jnp.pad(slot, (0, m_pad - m), constant_values=-1)
 
+    in_specs = [
+        pl.BlockSpec((1, example_tile), lambda ki, sc, t: (ki, t)),
+        pl.BlockSpec((c, example_tile), lambda ki, sc, t: (0, t)),
+        pl.BlockSpec((example_tile,), lambda ki, sc, t: (t,)),
+    ]
+    operands = [bins_t, stats_t, slot_p]
+    if slot_map is not None:
+        n_in = slot_map.shape[0]
+        in_specs.append(pl.BlockSpec((n_in,), lambda ki, sc, t: (0,)))
+        operands.append(slot_map.astype(jnp.int32))
+
     sb = slot_chunk * n_bins
     out = pl.pallas_call(
         functools.partial(_hist_kernel, n_bins=n_bins, slot_chunk=slot_chunk,
                           m_total=m, example_tile=example_tile),
         grid=(k, n_sc, n_t),
-        in_specs=[
-            pl.BlockSpec((1, example_tile), lambda ki, sc, t: (ki, t)),
-            pl.BlockSpec((c, example_tile), lambda ki, sc, t: (0, t)),
-            pl.BlockSpec((example_tile,), lambda ki, sc, t: (t,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, c, sb), lambda ki, sc, t: (ki, sc, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((k, n_sc, c, sb), jnp.float32),
         interpret=interpret,
-    )(bins_t, stats_t, slot_p)
+    )(*operands)
 
     h = out.reshape(k, n_sc, c, slot_chunk, n_bins)
     h = h.transpose(1, 3, 0, 4, 2).reshape(n_sc * slot_chunk, k, n_bins, c)

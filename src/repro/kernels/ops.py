@@ -17,18 +17,21 @@ __all__ = ["histogram", "split_scan", "INTERPRET"]
 INTERPRET = jax.default_backend() != "tpu"
 
 
-def histogram(bins, stats, slot, *, num_slots, n_bins, slot_chunk=None):
+def histogram(bins, stats, slot, *, num_slots, n_bins, slot_chunk=None,
+              slot_map=None):
     """H[S,K,B,C] via the one-hot-MXU Pallas kernel (see kernels/histogram.py).
 
     slot_chunk defaults so the per-program onehot tile (Mt x Sc*B f32) stays
-    within a ~4 MiB VMEM budget.
+    within a ~4 MiB VMEM budget.  ``slot_map`` ([S_in] i32 -> packed slot or
+    -1) is the masked-slot path used by sibling subtraction: skipped slots
+    are remapped away in-kernel and cost no VMEM traffic.
     """
     if slot_chunk is None:
         budget_lanes = (4 << 20) // (4 * 512)               # Mt=512 rows
         slot_chunk = max(1, min(num_slots, budget_lanes // max(1, n_bins)))
     return histogram_pallas(bins, stats, slot, num_slots=num_slots,
                             n_bins=n_bins, slot_chunk=slot_chunk,
-                            interpret=INTERPRET)
+                            interpret=INTERPRET, slot_map=slot_map)
 
 
 def split_scan(hist, n_num, n_cat, *, heuristic="info_gain", min_leaf=1):

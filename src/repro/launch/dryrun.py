@@ -145,7 +145,7 @@ def run_udt_cell(mesh_name, mesh, *, m_examples=1 << 20, k_feats=48,
         sds = jax.ShapeDtypeStruct
         arrays = {k: sds((1 << 20,), jnp.int32)
                   for k in ("feat", "op", "tbin", "count", "depth", "left",
-                            "right")}
+                            "right", "parent")}
         arrays["score"] = sds((1 << 20,), jnp.float32)
         arrays["label"] = sds((1 << 20,), jnp.float32)
         arrays["leaf"] = sds((1 << 20,), jnp.bool_)
@@ -156,6 +156,7 @@ def run_udt_cell(mesh_name, mesh, *, m_examples=1 << 20, k_feats=48,
             sds((m_examples,), jnp.float32),                # y
             sds((m_examples,), jnp.int32),                  # assign
             arrays,
+            sds((1, 1, 1, 1), jnp.float32),                 # parent-hist pairs
             sds((k_feats,), jnp.int32), sds((k_feats,), jnp.int32),
             sds((), jnp.int32), sds((), jnp.int32),
             sds((), jnp.int32), sds((), jnp.int32))

@@ -52,10 +52,14 @@ def check(task, cols, y, n_classes, dist, exact=True):
 
 cols, y = make_classification(600, 7, 3, seed=9, n_cat_features=2,
                               missing_frac=0.02)
-# data+feature parallel, multi-pod data, and feature-only
+# data+feature parallel, multi-pod data, feature-only, and the
+# sibling-subtraction psum path (slot_scatter off -> the per-level
+# collective covers only the packed smaller-child histogram)
 for dist in (DistConfig(data_axes=("pod", "data"), model_axis="model"),
              DistConfig(data_axes=("data",), model_axis=None),
-             DistConfig(data_axes=(), model_axis="model")):
+             DistConfig(data_axes=(), model_axis="model"),
+             DistConfig(data_axes=("pod", "data"), model_axis="model",
+                        slot_scatter=False)):
     check("classification", cols, y, 3, dist)
 
 colsr, yr = make_regression(500, 5, seed=4)

@@ -2,6 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # CI installs it; degrade to skips locally
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

@@ -6,6 +6,7 @@ import math
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # CI installs it; degrade to skips locally
 from hypothesis import given, settings, strategies as st
 
 from repro.core import fit_bins, best_splits, node_histogram, class_stats
