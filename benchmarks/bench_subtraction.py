@@ -11,13 +11,18 @@ balanced tree every level beyond the root halves, so the build-total ratio
 approaches 2x as depth grows (>= 1.5x by depth 6).
 
 Writes BENCH_subtraction.json so the perf trajectory is tracked across PRs
-(uploaded as a CI artifact by the bench-smoke job).
+(uploaded as a CI artifact by the bench-smoke job).  ``--gate`` is the
+blocking CI mode: it loads the committed BENCH_subtraction.json as the
+baseline, re-runs the smoke shapes, and exits nonzero when the build-total
+scatter-work ratio falls below the 1.5x floor or materially below the
+baseline (the ROADMAP regression alert).
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -97,16 +102,20 @@ def _onehot_wallclock(table, y, c, max_depth):
 
 
 def run(m=20_000, k=12, c=4, max_depth=9, n_bins=64, onehot_m=8_000,
-        out="BENCH_subtraction.json"):
+        out="BENCH_subtraction.json", quick=False):
+    """``quick`` skips the warm-up and onehot wall-clock builds: the
+    bench-gate only consumes the structural scatter ratio and tree
+    identity, so the blocking CI job builds each tree exactly once."""
     cols, y = make_classification(m, k, c, seed=0, teacher_depth=max_depth,
                                   noise=0.02)
     table = fit_bins(cols, max_num_bins=n_bins)
     cfg_on = TreeConfig(max_depth=max_depth)
     cfg_off = TreeConfig(max_depth=max_depth, sibling_subtraction=False)
 
-    # warm both paths (jit compilation), then measure
-    build_tree(table, y, cfg_on, n_classes=c)
-    build_tree(table, y, cfg_off, n_classes=c)
+    if not quick:
+        # warm both paths (jit compilation), then measure
+        build_tree(table, y, cfg_on, n_classes=c)
+        build_tree(table, y, cfg_off, n_classes=c)
     t_on, times_on = _timed_build(table, y, cfg_on, c)
     t_off, times_off = _timed_build(table, y, cfg_off, c)
 
@@ -122,11 +131,14 @@ def run(m=20_000, k=12, c=4, max_depth=9, n_bins=64, onehot_m=8_000,
         lv["sub_ms"] = round(ton * 1e3, 2)
         lv["full_ms"] = round(toff * 1e3, 2)
 
-    oh_cols, oh_y = make_classification(onehot_m, 8, 3, seed=1,
-                                        teacher_depth=min(max_depth, 7),
-                                        noise=0.02)
-    onehot = _onehot_wallclock(fit_bins(oh_cols, max_num_bins=32), oh_y, 3,
-                               min(max_depth, 7))
+    if quick:
+        onehot = None
+    else:
+        oh_cols, oh_y = make_classification(onehot_m, 8, 3, seed=1,
+                                            teacher_depth=min(max_depth, 7),
+                                            noise=0.02)
+        onehot = _onehot_wallclock(fit_bins(oh_cols, max_num_bins=32), oh_y,
+                                   3, min(max_depth, 7))
 
     total_full = sum(lv["full_rows"] for lv in levels)
     total_sub = sum(lv["sub_rows"] for lv in levels)
@@ -149,16 +161,66 @@ def run(m=20_000, k=12, c=4, max_depth=9, n_bins=64, onehot_m=8_000,
     for lv in levels:
         print("subtraction,{depth},{nodes},{full_rows},{sub_rows},{ratio},"
               "{full_ms},{sub_ms}".format(**lv))
+    oh = ("" if onehot is None else
+          f"wall(onehot) {onehot['full_ms']}ms -> {onehot['sub_ms']}ms "
+          f"({onehot['speedup']}x), ")
     print(f"subtraction_total,rows {total_full} -> {total_sub} "
           f"({report['scatter_reduction_ratio']}x less scatter work), "
           f"wall(segment) {report['wall_full_ms']}ms -> "
           f"{report['wall_sub_ms']}ms ({report['wall_speedup']}x), "
-          f"wall(onehot) {onehot['full_ms']}ms -> {onehot['sub_ms']}ms "
-          f"({onehot['speedup']}x), identical={identical}, -> {out}")
+          f"{oh}identical={identical}, -> {out}")
     return report
 
 
+MIN_RATIO = 1.5             # absolute floor (ROADMAP alert threshold)
+BASELINE_SLACK = 0.95       # tolerated fraction of the committed baseline
+
+
+def gate(baseline_path="BENCH_subtraction.json"):
+    """Blocking CI gate: smoke run vs the committed baseline.
+
+    Returns an exit code (0 pass, 1 fail).  The scatter-work ratio is a
+    deterministic function of the built tree, so the comparison is stable
+    across runners; the small BASELINE_SLACK only absorbs tree changes from
+    jax version bumps.  Baselines from a different config (e.g. a full-size
+    run) still enforce the absolute floor but skip the relative check.
+    """
+    baseline = None
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    # the gate run writes to a throwaway path: overwriting the committed
+    # baseline here would let a regressed run ratchet the baseline down and
+    # defeat its own relative check on the next invocation
+    report = run(**SMOKE, quick=True, out=os.path.join(
+        tempfile.gettempdir(), "BENCH_subtraction_gate.json"))
+    ratio = report["scatter_reduction_ratio"]
+    ok = ratio >= MIN_RATIO
+    lines = [f"bench-gate: smoke scatter-work ratio {ratio}x "
+             f"(floor {MIN_RATIO}x) -> {'OK' if ok else 'FAIL'}"]
+    if not report["trees_identical"]:
+        ok = False
+        lines.append("bench-gate: FAIL subtraction tree != recompute tree")
+    if baseline is None:
+        lines.append(f"bench-gate: no baseline at {baseline_path} "
+                     "(floor check only)")
+    elif baseline.get("config") != report["config"]:
+        lines.append("bench-gate: baseline config differs "
+                     "(floor check only)")
+    else:
+        want = BASELINE_SLACK * baseline["scatter_reduction_ratio"]
+        rel_ok = ratio >= want
+        ok = ok and rel_ok
+        lines.append(f"bench-gate: baseline ratio "
+                     f"{baseline['scatter_reduction_ratio']}x, require >= "
+                     f"{round(want, 3)}x -> {'OK' if rel_ok else 'FAIL'}")
+    print("\n".join(lines))
+    return 0 if ok else 1
+
+
 def main():
+    if "--gate" in sys.argv:
+        sys.exit(gate())
     if "--smoke" in sys.argv:
         return run(**SMOKE)
     return run()

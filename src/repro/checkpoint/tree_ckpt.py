@@ -8,11 +8,14 @@ binned table, so a restarted worker set replays from the last completed
 level; stragglers are bounded because per-level work is fixed-shape
 (B bins x S slots regardless of data skew).
 
-The sibling-subtraction histogram cache (BuildState.phist) is deliberately
-NOT persisted: it is pure derived state, and a resumed build simply
-recomputes its first level's histograms in full before re-entering the
-subtraction fast path -- bit-identical for classification, so the
-resume-equivalence contract (tests/test_checkpoint.py) is unchanged."""
+The sibling-subtraction histogram cache (BuildState.phist) is persisted as
+an OPTIONAL extra shard when present, so the first resumed level re-enters
+the subtraction fast path instead of recomputing all histograms in full.
+It is pure derived state, so checkpoints written without it (PR 1 format,
+or levels where the cache was skipped for budget reasons) restore fine —
+the resumed build just recomputes its first level before re-entering the
+fast path, bit-identical for classification either way (the
+resume-equivalence contract of tests/test_checkpoint.py)."""
 from __future__ import annotations
 
 import json
@@ -36,20 +39,33 @@ class TreeCheckpointer:
         self._count += 1
         if self._count % self.every:
             return
-        save_pytree(
-            {"arrays": state.arrays, "assign": state.assign},
-            self.directory, state.depth,
-            extra={"level_start": state.level_start,
-                   "level_end": state.level_end,
-                   "next_free": state.next_free,
-                   "depth": state.depth})
+        tree = {"arrays": state.arrays, "assign": state.assign}
+        extra = {"level_start": state.level_start,
+                 "level_end": state.level_end,
+                 "next_free": state.next_free,
+                 "depth": state.depth}
+        if state.phist is not None:
+            tree["phist"] = state.phist
+            extra["phist_base"] = int(state.phist_base)
+        save_pytree(tree, self.directory, state.depth, extra=extra)
 
 
 def restore_build_state(directory: str, template_arrays, template_assign,
                         step=None) -> BuildState:
-    tree, manifest = restore_pytree(
-        {"arrays": template_arrays, "assign": template_assign},
-        directory, step)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    # the phist cache is optional (and shape-varying per level), so peek at
+    # the manifest to decide whether the restore template carries it
+    with open(os.path.join(directory, f"step_{step:08d}",
+                           "manifest.json")) as f:
+        has_phist = "phist" in json.load(f)["keys"]
+    template = {"arrays": template_arrays, "assign": template_assign}
+    if has_phist:
+        template["phist"] = np.zeros((), np.float32)   # structure only
+    tree, manifest = restore_pytree(template, directory, step)
     ex = manifest["extra"]
     return BuildState(tree["arrays"], tree["assign"], ex["level_start"],
-                      ex["level_end"], ex["next_free"], ex["depth"])
+                      ex["level_end"], ex["next_free"], ex["depth"],
+                      tree.get("phist"), ex.get("phist_base", -1))

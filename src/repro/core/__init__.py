@@ -13,6 +13,7 @@ from repro.core.binning import (  # noqa: F401
 from repro.core.heuristics import HEURISTICS  # noqa: F401
 from repro.core.histogram import (node_histogram,  # noqa: F401
                                   node_histogram_smaller_child,
+                                  node_histogram_sibling_fused,
                                   class_stats, moment_stats)
 from repro.core.split import (  # noqa: F401
     best_splits, evaluate_predicate, SplitDecision, OP_LE, OP_GT, OP_EQ,

@@ -43,13 +43,19 @@ __all__ = ["DistConfig", "build_tree_distributed", "make_sharded_step"]
 class DistConfig:
     data_axes: tuple = ("data",)       # example-sharding mesh axes
     model_axis: str | None = "model"   # feature-sharding mesh axis (or None)
-    # Two exclusive ways to shrink the per-level histogram collective:
-    #   slot_scatter  -- reduce_scatter the [S,K,B,C] chunk over the slot
-    #                    axis (half the bytes of a ring all-reduce);
-    #   sibling subtraction (TreeConfig.sibling_subtraction) -- psum only
+    # Two COMPOSABLE ways to shrink the per-level histogram collective:
+    #   slot_scatter  -- reduce_scatter the histogram chunk over its leading
+    #                    axis (half the bytes of a ring all-reduce, 1/dsize
+    #                    of the selection compute per device);
+    #   sibling subtraction (TreeConfig.sibling_subtraction) -- scatter only
     #    the packed smaller-child histogram ([S/2,K,B,C]: half the bytes
-    #    AND half the scatter work), parent cache sharded over the feature
-    #    axis.  When slot_scatter is on it wins and subtraction is disabled.
+    #    AND half the scatter work).
+    # With both on, the packed [S/2] pair axis is reduce_scattered and each
+    # shard derives its co-child slots from its (pair, feature)-sharded
+    # slice of the parent cache, so the per-level collective covers
+    # S/2 x K x B x C bytes split dsize ways.  When the pair count does not
+    # divide the data-shard count for a given chunk size, that chunk falls
+    # back to the psum + subtraction path (still exact).
     slot_scatter: bool = True          # reduce_scatter histograms over slots
 
 
@@ -70,9 +76,10 @@ def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
 
     ``use_sub`` / ``want_hist`` select the sibling-subtraction variants: the
     parent histogram rows come in (and the cached level histogram goes out)
-    sharded over the feature axis, so the cache memory scales with K/f_shards
-    per device and the per-level psum covers only the packed smaller-child
-    histogram.
+    sharded over the feature axis -- and, when slot_scatter composes, over
+    the pair/slot axis too -- so the cache memory scales with K/f_shards
+    (x 1/d_shards composed) per device and the per-level collective covers
+    only the packed smaller-child histogram.
 
     This is also what launch/dryrun.py lowers for the UDT rows of the
     roofline table (the paper-technique cell)."""
@@ -80,8 +87,16 @@ def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
     fspec = P(None, dist.model_axis)   # [M, K] -> features on model axis
     rep = P()
 
-    scatter_ok = (dist.slot_scatter and not use_sub and num_slots % max(
-        1, int(np.prod([mesh.shape[a] for a in dist.data_axes]))) == 0)
+    d_shards = max(1, int(np.prod([mesh.shape[a] for a in dist.data_axes])))
+    # slot_scatter needs the reduce_scattered leading axis to divide the
+    # data-shard count: the full [S] slot axis without subtraction, the
+    # packed [S/2] pair axis with it (composition).
+    scatter_ok = (dist.slot_scatter and num_slots % d_shards == 0
+                  and (not use_sub or (num_slots // 2) % d_shards == 0))
+    # the parent cache / cached-level histogram live on the full slot axis;
+    # under composition they are additionally sharded over the data axes
+    # (slot-major tiling, matching psum_scatter's tiled order).
+    sspec = (P(dist.data_axes, dist.model_axis) if scatter_ok else fspec)
     step_kw = dict(kw, num_slots=num_slots, data_axes=dist.data_axes,
                    model_axis=dist.model_axis, slot_scatter=scatter_ok,
                    use_sub=use_sub, want_hist=want_hist)
@@ -97,11 +112,11 @@ def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
                 dspec,                               # yv [M]
                 dspec,                               # assign [M]
                 rep,                                 # tree arrays (replicated)
-                fspec if use_sub else rep,           # parent hist pairs
+                sspec if use_sub else rep,           # parent hist pairs
                 P(dist.model_axis),                  # n_num [K]
                 P(dist.model_axis),                  # n_cat [K]
                 rep, rep, rep, rep)                  # scalars
-    out_specs = (rep, rep, fspec if want_hist else rep)
+    out_specs = (rep, rep, sspec if want_hist else rep)
     sharded = shard_map_norep(body, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs)
     return jax.jit(sharded)
@@ -177,16 +192,13 @@ def build_tree_distributed(table: BinnedTable, y,
     route_fn = make_sharded_route(mesh, dist)
     dummy_pp = jnp.zeros((1, 1, 1, 1), dtype=jnp.float32)
 
-    # sibling subtraction halves both scatter work and psum bytes, but its
-    # parent cache lives on the full slot axis -- mutually exclusive with
-    # an EFFECTIVE slot_scatter (the reduce_scatter only happens when there
-    # are data axes; feature-only meshes keep subtraction).  The cache is
-    # sharded over the feature axis, so the budget gate uses per-device row
-    # bytes.
+    # sibling subtraction halves both scatter work and collective bytes and
+    # now COMPOSES with slot_scatter: the packed pair axis is
+    # reduce_scattered and the parent cache is sharded over
+    # (slot, feature).  The budget gate conservatively uses the
+    # feature-shard row bytes (the composed cache is smaller still).
     subtract = (((k_pad // f_shards) * b * c * 4, config.sub_cache_bytes)
-                if (_subtract_eligible(config, m)
-                    and not (dist.slot_scatter and dist.data_axes))
-                else None)
+                if _subtract_eligible(config, m) else None)
 
     def step(arrays, assign, cs, cn, next_free, depth, num_slots, pp,
              use_sub, want_hist):

@@ -22,6 +22,12 @@ scatters statistics only for the smaller child of every split pair and
 derives the co-child as ``H_parent - H_small``.  Skipped slots are never
 materialised -- the pair axis is *packed*, so the scatter target (and the
 per-level collective in the distributed build) is half the size.
+
+``node_histogram_sibling_fused`` goes one step further on the pallas
+backend: it hands the parent rows to the kernel and the derivation plus the
+pair interleave happen in the kernel's epilogue straight out of VMEM, so
+the derived sibling never exists in HBM as a separate tensor (the
+single-shard fast path of the tree builder).
 """
 from __future__ import annotations
 
@@ -30,8 +36,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["node_histogram", "node_histogram_smaller_child", "class_stats",
-           "moment_stats"]
+__all__ = ["node_histogram", "node_histogram_smaller_child",
+           "node_histogram_sibling_fused", "class_stats", "moment_stats"]
 
 
 def class_stats(labels: jax.Array, n_classes: int) -> jax.Array:
@@ -134,3 +140,47 @@ def node_histogram_smaller_child(bins: jax.Array, stats: jax.Array,
     packed = jnp.where(slot >= 0,
                        slot_map[jnp.clip(slot, 0, num_slots - 1)], -1)
     return _BACKENDS[backend](bins, stats, packed, num_slots // 2, n_bins)
+
+
+@functools.partial(jax.jit, static_argnames=("num_slots", "n_bins", "backend"))
+def node_histogram_sibling_fused(bins: jax.Array, stats: jax.Array,
+                                 slot: jax.Array, compute: jax.Array,
+                                 phist_pairs: jax.Array, *,
+                                 num_slots: int, n_bins: int,
+                                 backend: str = "pallas") -> jax.Array:
+    """Smaller-child scatter + in-kernel sibling derivation, in one pass.
+
+    ``phist_pairs`` [num_slots//2, K, B, C] holds each sibling pair's parent
+    histogram row; ``compute`` is the per-slot "scatter me" mask of
+    ``node_histogram_smaller_child``.  Returns the FULL [num_slots, K, B, C]
+    child histogram: the computed child's block is the packed scatter, its
+    sibling is ``H_parent - H_small``.
+
+    On the ``pallas`` backend the subtraction and the pair interleave run in
+    the kernel's epilogue straight out of VMEM (kernels/histogram.py), so no
+    derived-sibling tensor and no jnp subtraction appear between the kernel
+    and the selection scan.  Other backends (and the parity oracle for the
+    fused kernel) take the reference jnp path: packed scatter, subtract,
+    interleave.  Exactness contract as ``node_histogram_smaller_child``:
+    bit-identical for integer-count channels below 2**24 examples,
+    accumulation-order tolerance for float moment channels.
+    """
+    if num_slots % 2:
+        raise ValueError("pair packing needs an even slot count")
+    small_is_left = compute[0::2]                            # [pairs]
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        slot_map = jnp.where(compute,
+                             jnp.arange(num_slots, dtype=jnp.int32) // 2, -1)
+        return kops.histogram(bins, stats, slot, num_slots=num_slots // 2,
+                              n_bins=n_bins, slot_map=slot_map,
+                              phist=phist_pairs, side=small_is_left)
+    h_small = node_histogram_smaller_child(bins, stats, slot, compute,
+                                           num_slots=num_slots, n_bins=n_bins,
+                                           backend=backend)
+    h_der = phist_pairs - h_small
+    sl = small_is_left[:, None, None, None]
+    return jnp.stack([jnp.where(sl, h_small, h_der),
+                      jnp.where(sl, h_der, h_small)],
+                     axis=1).reshape(num_slots, bins.shape[1], n_bins,
+                                     stats.shape[-1])

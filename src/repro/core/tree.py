@@ -37,6 +37,7 @@ from repro.core import split as split_mod
 from repro.core.binning import BinnedTable
 from repro.core.histogram import (node_histogram,
                                   node_histogram_smaller_child,
+                                  node_histogram_sibling_fused,
                                   class_stats, moment_stats)
 from repro.core.split import best_splits, evaluate_predicate, NEG_INF
 
@@ -178,16 +179,21 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
     parent histogram of sibling pair ``j = slot // 2`` ([num_slots//2, K, B,
     C], gathered by ``_parent_rows``), statistics are scattered only for
     the smaller child of each pair, and the co-child's histogram is
-    ``H_parent - H_small`` -- branch-free under jit.  ``want_hist`` returns
-    the chunk's full histogram so the build loop can cache it for the next
-    level (a scalar 0 otherwise).
+    ``H_parent - H_small`` -- branch-free under jit.  On the single-shard
+    pallas backend the derivation is FUSED into the histogram kernel's
+    epilogue (node_histogram_sibling_fused); under ``slot_scatter`` the
+    packed pair axis is reduce_scattered and ``phist_pairs`` arrives
+    sharded over (pair, feature), so both halvings compose.  ``want_hist``
+    returns the chunk's full histogram so the build loop can cache it for
+    the next level (a scalar 0 otherwise).
     """
     s = num_slots
     k_local = bins.shape[1]
     scatter_on = bool(slot_scatter and data_axes)
-    # subtraction scatters a *packed* pair axis; slot_scatter shards the
-    # full slot axis -- the two collective-halving modes are exclusive.
-    assert not (use_sub and scatter_on)
+    # subtraction and slot_scatter COMPOSE: the packed [s/2] smaller-child
+    # histogram is reduce_scattered over the data axes and each shard
+    # derives its co-child slots from its pair-shard of the parent cache
+    # (phist_pairs arrives sharded over the pair axis in that mode).
     assert not use_sub or task in ("classification", "regression_variance")
 
     def reduce_data(x):
@@ -275,17 +281,43 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
         small_is_left = cnt[0::2] <= cnt[1::2]               # [s/2]
         compute = jnp.stack([small_is_left, ~small_is_left],
                             axis=1).reshape(s)
-        h_small = reduce_data(node_histogram_smaller_child(
+        if not data_axes:
+            # single shard: on pallas the subtraction and the pair
+            # interleave run in the kernel's epilogue, so the derived
+            # sibling never materialises in HBM and no jnp derivation op
+            # is emitted; other backends take the same function's jnp
+            # subtract+interleave fallback.  Slots past chunk_n gather
+            # garbage parent rows; every downstream write drops them
+            # (node_ids == max_nodes there).
+            return node_histogram_sibling_fused(
+                bins, stats_rows, slot, compute, phist_pairs, num_slots=s,
+                n_bins=n_bins, backend=hist_backend)
+        h_small = node_histogram_smaller_child(
             bins, stats_rows, slot, compute, num_slots=s, n_bins=n_bins,
-            backend=hist_backend))                           # [s/2,K,B,C]
+            backend=hist_backend)                            # [s/2,K,B,C]
+        if scatter_on:
+            # composed mode: reduce_scatter the PACKED pair axis -- half
+            # the collective bytes of the dense slot_scatter AND half the
+            # scatter work -- then derive co-children locally from the
+            # pair-sharded parent rows.  My pairs are the tiled block at
+            # the flattened data-shard index (psum_scatter tiling order).
+            h_small = reduce_data(h_small)                   # [s/2/d,...]
+            per = h_small.shape[0]
+            idx = jnp.int32(0)
+            for ax in data_axes:
+                idx = idx * compat.axis_size(ax) + jax.lax.axis_index(ax)
+            sl = jax.lax.dynamic_slice(small_is_left, (idx * per,), (per,))
+        else:
+            h_small = reduce_data(h_small)                   # psum [s/2,...]
+            sl = small_is_left
         # slots past chunk_n have no parent row; their lanes carry garbage
         # that every downstream write drops (node_ids == max_nodes there).
         h_der = phist_pairs - h_small
-        sl = small_is_left[:, None, None, None]
-        return jnp.stack([jnp.where(sl, h_small, h_der),
-                          jnp.where(sl, h_der, h_small)],
-                         axis=1).reshape(s, k_local, n_bins,
-                                         stats_rows.shape[-1])
+        slb = sl[:, None, None, None]
+        return jnp.stack([jnp.where(slb, h_small, h_der),
+                          jnp.where(slb, h_der, h_small)],
+                         axis=1).reshape(2 * h_small.shape[0], k_local,
+                                         n_bins, stats_rows.shape[-1])
 
     if task == "regression":
         # Algorithm 6: per-node label split -> per-example pseudo class.

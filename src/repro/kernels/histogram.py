@@ -18,7 +18,32 @@ Layout notes (TPU tiling: last dim = 128 lanes, 2nd-to-last = 8 sublanes):
   * VMEM working set = onehot tile (Mt x Sc*B f32) + output block; the
     wrapper picks Sc so this fits the ~16 MiB VMEM budget.
 
-Validated in interpret mode against ref.histogram_ref (CPU has no Mosaic).
+Fused sibling-derivation epilogue (``phist``/``side`` inputs): the
+sibling-subtraction builder scatters only the smaller child of each split
+pair (packed pair axis, in-kernel ``slot_map`` remap) and derives the
+co-child as ``H_parent - H_small``.  Without fusion that derivation is a
+jnp subtract/interleave *after* the kernel, so every derived sibling
+round-trips through HBM.  With ``phist`` given:
+
+  * ``num_slots`` counts packed *pairs*; the smaller-child block accumulates
+    in a VMEM scratch buffer ([C, Sc*B], persistent across the sequential
+    example-tile axis) instead of the output ref,
+  * ``phist`` arrives pre-transposed to the kernel layout [K, n_sc, C, Sc*B]
+    (one parent row per pair, the exact layout of a packed kernel output)
+    and is block-sliced per (feature, slot-chunk) like the output,
+  * after the last example tile the epilogue reads the parent block, forms
+    ``derived = parent - small`` in VMEM, and writes the *full* interleaved
+    child block [C, 2*Sc*B] (pair j -> full slots 2j|2j+1, ``side[j]``
+    saying which side the computed child lands on) in one store.  Derived
+    siblings therefore never exist in HBM as a separate tensor and the
+    level step's jaxpr carries no jnp sibling subtraction.
+  * the epilogue's packed->interleaved expansion reshapes only within the
+    lane axis ([C, Sc*B] -> [C, Sc, B] -> [C, Sc*2*B]); on hardware this is
+    a Mosaic lane relayout, validated here in interpret mode like the rest
+    of the kernel.
+
+Validated in interpret mode against ref.histogram_ref / ref.sibling_ref
+(CPU has no Mosaic).
 """
 from __future__ import annotations
 
@@ -27,6 +52,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["histogram_pallas", "DEFAULT_EXAMPLE_TILE"]
 
@@ -35,8 +61,16 @@ DEFAULT_EXAMPLE_TILE = 512
 
 def _hist_kernel(bins_ref, stats_t_ref, slot_ref, *refs,
                  n_bins: int, slot_chunk: int, m_total: int,
-                 example_tile: int):
-    *maybe_remap, out_ref = refs
+                 example_tile: int, n_tiles: int, has_remap: bool,
+                 fused: bool):
+    refs = list(refs)
+    remap_ref = refs.pop(0) if has_remap else None
+    phist_ref, side_ref = ((refs.pop(0), refs.pop(0)) if fused
+                           else (None, None))
+    out_ref = refs.pop(0)
+    # fused mode accumulates in scratch so the output ref can hold the
+    # interleaved [C, 2*Sc*B] block written once by the epilogue
+    acc_ref = refs.pop(0) if fused else out_ref
     k_i = pl.program_id(0)      # feature        (unused: blocks pre-sliced)
     sc = pl.program_id(1)       # slot chunk
     t = pl.program_id(2)        # example tile (innermost, sequential)
@@ -44,18 +78,18 @@ def _hist_kernel(bins_ref, stats_t_ref, slot_ref, *refs,
 
     @pl.when(t == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     bins = bins_ref[0, :]                                    # [Mt] i32
     slot = slot_ref[:]                                       # [Mt] i32
     stats_t = stats_t_ref[...]                               # [C, Mt] f32
 
-    if maybe_remap:
+    if has_remap:
         # masked-slot remap (sibling subtraction): slot ids are first mapped
         # through the [S_in] table; -1 entries drop the row, so skipped
         # sibling slots never touch the onehot tile or the VMEM output
         # block.  The full-histogram path skips the gather entirely.
-        remap = maybe_remap[0][:]                            # [S_in] i32
+        remap = remap_ref[:]                                 # [S_in] i32
         n_in = remap.shape[0]
         mapped = jnp.take(remap, jnp.clip(slot, 0, n_in - 1))
         slot = jnp.where((slot >= 0) & (slot < n_in), mapped, -1)
@@ -69,16 +103,35 @@ def _hist_kernel(bins_ref, stats_t_ref, slot_ref, *refs,
     lanes = jax.lax.broadcasted_iota(jnp.int32, (example_tile, sb), 1)
     onehot = (joint[:, None] == lanes).astype(jnp.float32)   # [Mt, SB]
 
-    out_ref[...] += jax.lax.dot_general(
+    acc_ref[...] += jax.lax.dot_general(
         stats_t, onehot, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)                  # [C, SB]
+
+    if fused:
+        @pl.when(t == n_tiles - 1)
+        def _sibling_epilogue():
+            # derive the co-child from the cached parent block and emit the
+            # interleaved pair block straight from VMEM (nothing but the
+            # final [C, 2*Sc*B] store touches HBM)
+            small = acc_ref[...]                             # [C, Sc*B]
+            parent = phist_ref[0, 0]                         # [C, Sc*B]
+            derived = parent - small
+            c = small.shape[0]
+            sm = small.reshape(c, slot_chunk, n_bins)
+            dv = derived.reshape(c, slot_chunk, n_bins)
+            # side[j] != 0 -> the computed (smaller) child is the LEFT slot
+            sl = (side_ref[:] != 0)[None, :, None]           # [1, Sc, 1]
+            full = jnp.stack([jnp.where(sl, sm, dv),
+                              jnp.where(sl, dv, sm)], axis=2)  # [C, Sc, 2, B]
+            out_ref[...] = full.reshape(1, 1, c, 2 * sb)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "num_slots", "n_bins", "slot_chunk", "example_tile", "interpret"))
 def histogram_pallas(bins, stats, slot, *, num_slots: int, n_bins: int,
                      slot_chunk: int = 16, example_tile: int = DEFAULT_EXAMPLE_TILE,
-                     interpret: bool = True, slot_map=None):
+                     interpret: bool = True, slot_map=None, phist=None,
+                     side=None):
     """bins [M,K] i32, stats [M,C] f32, slot [M] i32 -> H [S,K,B,C] f32.
 
     ``slot_map`` (optional [S_in] i32) remaps raw slot ids in-kernel: entry
@@ -86,7 +139,16 @@ def histogram_pallas(bins, stats, slot, *, num_slots: int, n_bins: int,
     subtraction builder uses this to pack the computed child of each split
     pair into half as many output slots without rewriting the [M] slot
     vector in HBM.  ``None`` is the identity over [0, num_slots).
+
+    ``phist`` (optional [num_slots, K, B, C]) switches on the fused
+    sibling-derivation epilogue: ``num_slots`` then counts packed *pairs*
+    (``slot_map`` must target [0, num_slots)), ``phist[j]`` is pair j's
+    parent histogram row and ``side`` ([num_slots] i32, nonzero = the
+    computed child is the left slot) fixes the interleave.  Returns the full
+    [2*num_slots, K, B, C] child histogram with the co-child derived
+    in-kernel as ``phist - H_small`` (see the module docstring).
     """
+    fused = phist is not None
     m, k = bins.shape
     c = stats.shape[-1]
     n_sc = -(-num_slots // slot_chunk)
@@ -109,16 +171,44 @@ def histogram_pallas(bins, stats, slot, *, num_slots: int, n_bins: int,
         operands.append(slot_map.astype(jnp.int32))
 
     sb = slot_chunk * n_bins
+    s_pad = n_sc * slot_chunk
+    scratch_shapes = []
+    if fused:
+        # parent rows, pre-transposed to the packed kernel output layout
+        # [K, n_sc, C, Sc*B] so the per-(feature, slot-chunk) BlockSpec is
+        # the same shape as a packed output block
+        ph = jnp.pad(phist, ((0, s_pad - num_slots), (0, 0), (0, 0), (0, 0)))
+        ph = ph.reshape(n_sc, slot_chunk, k, n_bins, c)
+        ph = ph.transpose(2, 0, 4, 1, 3).reshape(k, n_sc, c, sb)
+        side_p = jnp.pad(side.astype(jnp.int32), (0, s_pad - num_slots))
+        in_specs.append(pl.BlockSpec((1, 1, c, sb),
+                                     lambda ki, sc, t: (ki, sc, 0, 0)))
+        operands.append(ph)
+        in_specs.append(pl.BlockSpec((slot_chunk,), lambda ki, sc, t: (sc,)))
+        operands.append(side_p)
+        out_lanes = 2 * sb
+        scratch_shapes = [pltpu.VMEM((c, sb), jnp.float32)]
+    else:
+        out_lanes = sb
+
     out = pl.pallas_call(
         functools.partial(_hist_kernel, n_bins=n_bins, slot_chunk=slot_chunk,
-                          m_total=m, example_tile=example_tile),
+                          m_total=m, example_tile=example_tile, n_tiles=n_t,
+                          has_remap=slot_map is not None, fused=fused),
         grid=(k, n_sc, n_t),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, c, sb), lambda ki, sc, t: (ki, sc, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((k, n_sc, c, sb), jnp.float32),
+        out_specs=pl.BlockSpec((1, 1, c, out_lanes),
+                               lambda ki, sc, t: (ki, sc, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, n_sc, c, out_lanes), jnp.float32),
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(*operands)
 
+    if fused:
+        # epilogue layout: lane = local_pair * 2B + side * B + bin
+        h = out.reshape(k, n_sc, c, slot_chunk, 2, n_bins)
+        h = h.transpose(1, 3, 4, 0, 5, 2).reshape(2 * s_pad, k, n_bins, c)
+        return h[:2 * num_slots]
     h = out.reshape(k, n_sc, c, slot_chunk, n_bins)
     h = h.transpose(1, 3, 0, 4, 2).reshape(n_sc * slot_chunk, k, n_bins, c)
     return h[:num_slots]

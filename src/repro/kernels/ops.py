@@ -18,20 +18,30 @@ INTERPRET = jax.default_backend() != "tpu"
 
 
 def histogram(bins, stats, slot, *, num_slots, n_bins, slot_chunk=None,
-              slot_map=None):
+              slot_map=None, phist=None, side=None):
     """H[S,K,B,C] via the one-hot-MXU Pallas kernel (see kernels/histogram.py).
 
     slot_chunk defaults so the per-program onehot tile (Mt x Sc*B f32) stays
     within a ~4 MiB VMEM budget.  ``slot_map`` ([S_in] i32 -> packed slot or
     -1) is the masked-slot path used by sibling subtraction: skipped slots
     are remapped away in-kernel and cost no VMEM traffic.
+
+    ``phist``/``side`` select the fused sibling-derivation epilogue:
+    ``num_slots`` then counts packed pairs, ``phist`` [num_slots,K,B,C] is
+    the per-pair parent row and the kernel returns the full
+    [2*num_slots,K,B,C] child histogram with the co-child derived in VMEM
+    (no post-kernel jnp subtraction).  The fused epilogue additionally holds
+    the parent block and the 2x-wide interleaved output block in VMEM, so
+    the auto slot_chunk charges each packed slot double.
     """
     if slot_chunk is None:
         budget_lanes = (4 << 20) // (4 * 512)               # Mt=512 rows
-        slot_chunk = max(1, min(num_slots, budget_lanes // max(1, n_bins)))
+        per_slot = (2 if phist is not None else 1) * max(1, n_bins)
+        slot_chunk = max(1, min(num_slots, budget_lanes // per_slot))
     return histogram_pallas(bins, stats, slot, num_slots=num_slots,
                             n_bins=n_bins, slot_chunk=slot_chunk,
-                            interpret=INTERPRET, slot_map=slot_map)
+                            interpret=INTERPRET, slot_map=slot_map,
+                            phist=phist, side=side)
 
 
 def split_scan(hist, n_num, n_cat, *, heuristic="info_gain", min_leaf=1):

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.core import heuristics as H
 from repro.core.split import NEG_INF
 
-__all__ = ["histogram_ref", "split_scan_ref"]
+__all__ = ["histogram_ref", "sibling_ref", "split_scan_ref"]
 
 
 def histogram_ref(bins, stats, slot, *, num_slots, n_bins):
@@ -23,6 +23,28 @@ def histogram_ref(bins, stats, slot, *, num_slots, n_bins):
     oh = jax.nn.one_hot(idx, num_slots * n_bins, dtype=jnp.float32)
     h = jnp.einsum("mks,mc->ksc", oh, stats)
     return h.reshape(k, num_slots, n_bins, c).transpose(1, 0, 2, 3)
+
+
+def sibling_ref(bins, stats, slot, slot_map, phist, side, *, num_pairs,
+                n_bins):
+    """Oracle for the fused sibling-derivation epilogue.
+
+    Packed smaller-child scatter (raw slots remapped through ``slot_map``,
+    -1 drops the row), co-child derived as ``phist - H_small``, the pair
+    interleaved to the full [2*num_pairs, K, B, C] child axis with
+    ``side[j]`` nonzero meaning the computed child is the left slot."""
+    n_in = slot_map.shape[0]
+    packed = jnp.where((slot >= 0) & (slot < n_in),
+                       slot_map[jnp.clip(slot, 0, n_in - 1)], -1)
+    h_small = histogram_ref(bins, stats, packed, num_slots=num_pairs,
+                            n_bins=n_bins)
+    h_der = phist - h_small
+    sl = (side != 0)[:, None, None, None]
+    k = bins.shape[1]
+    return jnp.stack([jnp.where(sl, h_small, h_der),
+                      jnp.where(sl, h_der, h_small)],
+                     axis=1).reshape(2 * num_pairs, k, n_bins,
+                                     stats.shape[-1])
 
 
 def split_scan_ref(hist, n_num, n_cat, *, heuristic="info_gain", min_leaf=1):

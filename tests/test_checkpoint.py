@@ -79,3 +79,63 @@ def test_tree_build_resume_identical(tmp_path):
         np.testing.assert_array_equal(
             np.asarray(getattr(full, f)[:full.n_nodes]),
             np.asarray(getattr(resumed, f)[:full.n_nodes]))
+
+
+def test_tree_checkpoint_persists_phist_cache(tmp_path):
+    """The sibling-subtraction cache rides along in the checkpoint, so the
+    first resumed level keeps the fast path — and the resumed tree is still
+    bit-identical to the straight build."""
+    cols, y = make_classification(900, 5, 3, seed=7)
+    table = fit_bins(cols, max_num_bins=32)
+    cfg = TreeConfig(max_depth=9, chunk_slots=64)
+    full = build_tree(table, y, cfg, n_classes=3)
+
+    ck = TreeCheckpointer(str(tmp_path))
+    states = []
+    build_tree(table, y, cfg, n_classes=3,
+               level_callback=lambda s: (ck(s), states.append(s)))
+    mid = next(s for s in states[1:] if s.phist is not None)
+
+    template = {"arrays": _init_arrays(full.feat.shape[0]),
+                "assign": jnp.zeros((len(y),), jnp.int32)}
+    bs = restore_build_state(str(tmp_path), template["arrays"],
+                             template["assign"], step=mid.depth)
+    assert bs.phist is not None and bs.phist_base == mid.phist_base
+    np.testing.assert_array_equal(np.asarray(bs.phist), np.asarray(mid.phist))
+
+    resumed = build_tree(table, y, cfg, n_classes=3, resume=bs)
+    assert resumed.n_nodes == full.n_nodes
+    for f in ("feat", "op", "tbin", "label", "count", "left", "right", "leaf"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full, f)[:full.n_nodes]),
+            np.asarray(getattr(resumed, f)[:full.n_nodes]))
+
+
+def test_tree_checkpoint_old_format_restores(tmp_path):
+    """Checkpoints written without the phist shard (PR 1 format) restore to
+    a BuildState with no cache — the resume just recomputes level one."""
+    from repro.checkpoint.checkpoint import save_pytree
+
+    cols, y = make_classification(500, 4, 2, seed=11)
+    table = fit_bins(cols, max_num_bins=16)
+    cfg = TreeConfig(max_depth=6, chunk_slots=32)
+    full = build_tree(table, y, cfg, n_classes=2)
+
+    states = []
+    build_tree(table, y, cfg, n_classes=2, level_callback=states.append)
+    mid = states[len(states) // 2]
+    save_pytree({"arrays": mid.arrays, "assign": mid.assign},
+                str(tmp_path), mid.depth,
+                extra={"level_start": mid.level_start,
+                       "level_end": mid.level_end,
+                       "next_free": mid.next_free, "depth": mid.depth})
+
+    template = {"arrays": _init_arrays(full.feat.shape[0]),
+                "assign": jnp.zeros((len(y),), jnp.int32)}
+    bs = restore_build_state(str(tmp_path), template["arrays"],
+                             template["assign"])
+    assert bs.phist is None and bs.phist_base == -1
+    resumed = build_tree(table, y, cfg, n_classes=2, resume=bs)
+    assert resumed.n_nodes == full.n_nodes
+    np.testing.assert_array_equal(np.asarray(full.feat[:full.n_nodes]),
+                                  np.asarray(resumed.feat[:full.n_nodes]))

@@ -22,8 +22,9 @@ assert len(jax.devices()) == 8
 
 MESH = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
-def check(task, cols, y, n_classes, dist, exact=True):
-    cfg = TreeConfig(max_depth=10, task=task, chunk_slots=64)
+def check(task, cols, y, n_classes, dist, exact=True, **cfg_kw):
+    cfg = TreeConfig(**{**dict(max_depth=10, task=task, chunk_slots=64),
+                        **cfg_kw})
     table = fit_bins(cols, max_num_bins=32)
     t0 = build_tree(table, y, cfg, n_classes=n_classes)
     t1 = build_tree_distributed(table, y, cfg, mesh=MESH, dist=dist,
@@ -52,15 +53,28 @@ def check(task, cols, y, n_classes, dist, exact=True):
 
 cols, y = make_classification(600, 7, 3, seed=9, n_cat_features=2,
                               missing_frac=0.02)
-# data+feature parallel, multi-pod data, feature-only, and the
-# sibling-subtraction psum path (slot_scatter off -> the per-level
-# collective covers only the packed smaller-child histogram)
-for dist in (DistConfig(data_axes=("pod", "data"), model_axis="model"),
-             DistConfig(data_axes=("data",), model_axis=None),
-             DistConfig(data_axes=(), model_axis="model"),
-             DistConfig(data_axes=("pod", "data"), model_axis="model",
-                        slot_scatter=False)):
-    check("classification", cols, y, 3, dist)
+for dist, cfg_kw in (
+        # slot_scatter + sibling subtraction COMPOSED (both on by default):
+        # the packed pair axis is reduce_scattered over ('pod', 'data') and
+        # each shard derives its co-child slots from its phist shard
+        (DistConfig(data_axes=("pod", "data"), model_axis="model"), {}),
+        (DistConfig(data_axes=("data",), model_axis=None), {}),
+        (DistConfig(data_axes=(), model_axis="model"), {}),
+        # subtraction-only psum path (slot_scatter off -> the per-level
+        # collective covers only the packed smaller-child histogram)
+        (DistConfig(data_axes=("pod", "data"), model_axis="model",
+                    slot_scatter=False), {}),
+        # composed mode with a pair count that does NOT divide the data
+        # shards at the widest level (10 pairs, 4 shards): those chunks
+        # fall back to psum + subtraction, mixed with scattered chunks
+        (DistConfig(data_axes=("pod", "data"), model_axis="model"),
+         dict(chunk_slots=20)),
+        # dense psum reference: no scatter, no subtraction.  Every variant
+        # above must match this build (transitively through the local t0)
+        (DistConfig(data_axes=("pod", "data"), model_axis="model",
+                    slot_scatter=False), dict(sibling_subtraction=False)),
+):
+    check("classification", cols, y, 3, dist, **cfg_kw)
 
 colsr, yr = make_regression(500, 5, seed=4)
 check("regression", colsr, yr, None,

@@ -90,6 +90,52 @@ def test_split_scan_sse_moments():
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), rtol=1e-4)
 
 
+def _mk_fused(m, k, b, c, pairs, seed=0):
+    """Random fused-epilogue case: slots over 2*pairs, one computed child
+    per pair, arbitrary parent rows (the oracle subtracts whatever it is
+    handed, so parents need not be consistent unions here)."""
+    rng = np.random.default_rng(seed)
+    bins, stats, slot = _mk(m, k, b, c, 2 * pairs, seed=seed)
+    compute = np.zeros(2 * pairs, dtype=bool)
+    side = rng.integers(0, 2, size=pairs)
+    compute[2 * np.arange(pairs) + side] = True
+    slot_map = jnp.asarray(
+        np.where(compute, np.arange(2 * pairs) // 2, -1), dtype=jnp.int32)
+    phist = jnp.asarray(rng.uniform(1, 9, size=(pairs, k, b, c)),
+                        dtype=jnp.float32)
+    return bins, stats, slot, slot_map, phist, jnp.asarray(1 - side)
+
+
+@pytest.mark.parametrize("m,k,b,c,p", SHAPES)
+def test_histogram_fused_sibling_matches_ref(m, k, b, c, p):
+    bins, stats, slot, slot_map, phist, side = _mk_fused(m, k, b, c, p,
+                                                         seed=p)
+    got = ops.histogram(bins, stats, slot, num_slots=p, n_bins=b,
+                        slot_map=slot_map, phist=phist, side=side)
+    want = ref.sibling_ref(bins, stats, slot, slot_map, phist, side,
+                           num_pairs=p, n_bins=b)
+    assert got.shape == (2 * p, k, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [64, 256])
+@pytest.mark.parametrize("slot_chunk", [2, 5])
+def test_histogram_fused_sibling_tile_invariance(tile, slot_chunk):
+    from repro.kernels.histogram import histogram_pallas
+    m, k, b, c, p = 300, 3, 7, 4, 6
+    bins, stats, slot, slot_map, phist, side = _mk_fused(m, k, b, c, p,
+                                                         seed=5)
+    got = histogram_pallas(bins, stats, slot, num_slots=p, n_bins=b,
+                           slot_chunk=slot_chunk, example_tile=tile,
+                           interpret=True, slot_map=slot_map, phist=phist,
+                           side=side)
+    want = ref.sibling_ref(bins, stats, slot, slot_map, phist, side,
+                           num_pairs=p, n_bins=b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.integers(1, 200), st.integers(1, 4), st.integers(2, 20),
        st.integers(1, 5), st.integers(1, 7), st.integers(0, 10_000))

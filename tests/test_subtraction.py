@@ -14,7 +14,8 @@ import pytest
 
 from repro.core import (TreeConfig, build_tree, class_stats, fit_bins,
                         moment_stats, node_histogram,
-                        node_histogram_smaller_child)
+                        node_histogram_smaller_child,
+                        node_histogram_sibling_fused)
 from repro.data import make_classification, make_hybrid_table
 
 BACKENDS = ["segment", "onehot"]
@@ -116,6 +117,131 @@ def test_smaller_child_pallas_matches_segment():
                                      n_bins=9, backend="pallas")
     np.testing.assert_allclose(np.asarray(p), np.asarray(a),
                                rtol=1e-5, atol=1e-5)
+
+
+def _fused_case_inputs(rng, m, pairs, k, b, c, *, skew, empty_frac, kind):
+    """Shared setup for the fused-epilogue parity tests: a random pair case
+    plus its true parent histogram (the union of each pair's children, as
+    the previous level scattered it) and the smaller-child compute mask."""
+    bins, stats, slot, _ = _random_pair_case(
+        rng, m, pairs, k, b, c, skew=skew, empty_frac=empty_frac, kind=kind)
+    s = 2 * pairs
+    h_parent = node_histogram(bins, stats,
+                              jnp.where(slot >= 0, slot // 2, -1),
+                              num_slots=pairs, n_bins=b, backend="segment")
+    cnt = np.asarray(jnp.zeros(s).at[np.maximum(np.asarray(slot), 0)].add(
+        np.asarray(slot) >= 0))
+    small_is_left = cnt[0::2] <= cnt[1::2]
+    compute = jnp.asarray(
+        np.stack([small_is_left, ~small_is_left], 1).reshape(s))
+    return bins, stats, slot, compute, h_parent
+
+
+@pytest.mark.parametrize("kind", ["class", "moment"])
+@pytest.mark.parametrize("seed", range(5))
+def test_fused_epilogue_matches_jnp_derivation(kind, seed):
+    """The kernel-fused sibling block (interpret mode) vs the jnp
+    ``H_parent - H_small`` path: bit-identical for classification counts,
+    documented tolerance (and exact integer channel 0) for float moments."""
+    rng = np.random.default_rng(100 + seed)
+    m = int(rng.integers(50, 800))
+    pairs = int(rng.integers(1, 9))
+    k = int(rng.integers(1, 5))
+    b = int(rng.integers(3, 20))
+    c = int(rng.integers(2, 6))
+    bins, stats, slot, compute, h_parent = _fused_case_inputs(
+        rng, m, pairs, k, b, c, skew=float(rng.uniform(0, 0.45)),
+        empty_frac=0.25, kind=kind)
+    s = 2 * pairs
+    fused = node_histogram_sibling_fused(bins, stats, slot, compute,
+                                         h_parent, num_slots=s, n_bins=b,
+                                         backend="pallas")
+    want = node_histogram_sibling_fused(bins, stats, slot, compute,
+                                        h_parent, num_slots=s, n_bins=b,
+                                        backend="segment")
+    assert fused.shape == (s, k, b, c if kind == "class" else 3)
+    if kind == "class":
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(fused)[..., 0],
+                                      np.asarray(want)[..., 0])
+
+
+@pytest.mark.parametrize("kind", ["class", "moment"])
+def test_fused_epilogue_empty_and_skewed_siblings(kind):
+    """Degenerate pair shapes: most pairs entirely one-sided (the derived
+    sibling is the whole parent or empty) and a heavy routing skew."""
+    rng = np.random.default_rng(42)
+    bins, stats, slot, compute, h_parent = _fused_case_inputs(
+        rng, 600, 6, 3, 11, 4, skew=0.48, empty_frac=0.7, kind=kind)
+    fused = node_histogram_sibling_fused(bins, stats, slot, compute,
+                                         h_parent, num_slots=12, n_bins=11,
+                                         backend="pallas")
+    want = node_histogram_sibling_fused(bins, stats, slot, compute,
+                                        h_parent, num_slots=12, n_bins=11,
+                                        backend="segment")
+    if kind == "class":
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(fused)[..., 0],
+                                      np.asarray(want)[..., 0])
+
+
+def _iter_eqns(jaxpr):
+    """All equations of a jaxpr, recursing into sub-jaxprs EXCEPT the
+    pallas_call kernel body (in-kernel ops are the point of the fusion)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call":
+            continue
+        stack = list(eqn.params.values())
+        while stack:
+            v = stack.pop()
+            if isinstance(v, (list, tuple)):
+                stack.extend(v)
+            elif type(v).__name__ == "ClosedJaxpr":
+                yield from _iter_eqns(v.jaxpr)
+            elif type(v).__name__ == "Jaxpr":
+                yield from _iter_eqns(v)
+
+
+def test_fused_epilogue_level_step_jaxpr_has_no_jnp_derivation():
+    """Acceptance gate: with the pallas backend the level step's jaxpr
+    contains the histogram pallas_call but NO jnp subtraction over the
+    packed [S/2, K, B, C] pair axis — the sibling derivation happens only
+    inside the kernel epilogue."""
+    import jax
+    from repro.core.tree import _chunk_step, _init_arrays
+
+    m, k, b, c, s, max_nodes = 64, 3, 8, 2, 8, 64
+    rng = np.random.default_rng(0)
+    args = (jnp.asarray(rng.integers(0, b, size=(m, k)), jnp.int32),
+            jnp.asarray(np.eye(c, dtype=np.float32)[
+                rng.integers(0, c, size=m)]),
+            jnp.zeros((m,), jnp.int32),                 # lbins
+            jnp.zeros((m,), jnp.float32),               # y
+            jnp.asarray(rng.integers(0, s, size=m), jnp.int32),  # assign
+            _init_arrays(max_nodes),
+            jnp.ones((s // 2, k, b, c), jnp.float32),   # phist_pairs
+            jnp.full((k,), b, jnp.int32),
+            jnp.zeros((k,), jnp.int32),
+            jnp.int32(0), jnp.int32(s), jnp.int32(s), jnp.int32(2))
+    kw = dict(num_slots=s, n_bins=b, heuristic="info_gain",
+              task="classification", min_samples_split=2,
+              min_samples_leaf=1, max_depth=5, max_nodes=max_nodes,
+              hist_backend="pallas", select_backend="jnp", n_label_bins=1,
+              use_sub=True, want_hist=True)
+    jaxpr = jax.make_jaxpr(lambda *a: _chunk_step(*a, **kw))(*args)
+    eqns = list(_iter_eqns(jaxpr.jaxpr))
+    assert any(e.primitive.name == "pallas_call" for e in eqns)
+    packed = {(s // 2, k, b, c)}
+    bad = [e for e in eqns if e.primitive.name == "sub"
+           and any(tuple(v.aval.shape) in packed for v in e.invars)]
+    assert not bad, f"jnp sibling derivation survived fusion: {bad}"
 
 
 def test_builder_subtraction_pallas_backend():
