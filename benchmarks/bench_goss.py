@@ -1,0 +1,200 @@
+"""GOSS boosted-ensemble benchmark: histogram scatter work and validation
+quality for GOSS-sampled vs unsampled GradientBoostedTrees (both with the
+sibling-subtraction fast path on — the two reductions compose).
+
+    PYTHONPATH=src python -m benchmarks.bench_goss [--smoke | --gate]
+
+Scatter work counts the example rows each level's histogram pass actually
+accumulates, summed over every tree of the ensemble: the unsampled build
+scatters its (smaller-child) share of all M rows per level, the GOSS build
+the same share of just the (a + b) * M sampled rows — so at the smoke
+rates a = b = 0.1 the ensemble-total ratio approaches 1 / (a + b) = 5x and
+must stay >= 2x.  Rows are counted from the builder's own per-level
+BuildState (raw routed examples, per-pair minima whenever the level's
+parent cache was kept), so the number is a deterministic function of the
+built trees, not a wall-clock.
+
+Quality is validation RMSE on a held-out split of the synthetic regression
+task; the GOSS ensemble must stay within RMSE_TOL of the unsampled one.
+
+Writes BENCH_goss.json for the cross-PR perf trajectory (uploaded by the
+bench-smoke job).  ``--gate`` is the blocking CI mode: it loads the
+committed BENCH_goss.json as the baseline, re-runs the smoke shapes into a
+throwaway path (no self-ratcheting, same rule as bench_subtraction), and
+exits nonzero when the scatter-work ratio drops below the 2x floor /
+materially below the baseline, or the RMSE tolerance is exceeded.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (GossConfig, GradientBoostedTrees, TreeConfig,
+                        fit_bins, transform)
+from repro.data import make_regression, train_val_test_split
+
+# the one definition of the CI smoke-gate shapes (benchmarks/run.py --smoke
+# and the --gate mode both use it, so artifacts stay comparable)
+SMOKE = dict(m=6_000, k=6, n_trees=6, max_depth=5, n_bins=32,
+             top_rate=0.1, other_rate=0.1, seed=0)
+
+MIN_RATIO = 2.0      # absolute scatter-work floor (ISSUE 3 acceptance)
+RMSE_TOL = 1.25      # goss_rmse <= full_rmse * RMSE_TOL at smoke shapes
+                     # (measured ~1.05: a=b=0.1 trains each tree on 20%
+                     # of the rows; the slack absorbs jax version bumps)
+BASE_BEAT = 0.95     # AND goss_rmse <= BASE_BEAT * mean-predictor rmse —
+                     # a quality collapse must fail even if rmse_full drifts
+BASELINE_SLACK = 0.95  # tolerated fraction of the committed baseline ratio
+
+
+def _level_rows(states_per_tree):
+    """Scatter rows per tree from the builder's own per-level states.
+
+    Level 1 (the root) always scatters every routed example.  For each
+    completed level the callback's BuildState carries the NEXT level's node
+    range and the post-routing assignment, so the rows its histogram pass
+    will scatter are the per-pair minima of the children's raw counts when
+    the parent cache rode along (state.phist is not None — the exact gate
+    ``_grow`` uses), else the full count."""
+    totals = []
+    for states in states_per_tree:
+        rows = int(np.sum(np.asarray(states[0].assign) >= 0))     # root pass
+        for st in states:
+            ls, le = st.level_start, st.level_end
+            if le <= ls:
+                break
+            a = np.asarray(st.assign)
+            cnt = np.bincount(a[(a >= ls) & (a < le)] - ls,
+                              minlength=le - ls)
+            if st.phist is not None and (le - ls) % 2 == 0:
+                rows += int(np.minimum(cnt[0::2], cnt[1::2]).sum())
+            else:
+                rows += int(cnt.sum())
+        totals.append(rows)
+    return totals
+
+
+def _fit_counting(gbt, table, y):
+    """Fit while grouping per-level BuildStates by tree (a tree's first
+    completed level is the root, depth cursor 2)."""
+    per_tree, t0 = [], time.perf_counter()
+
+    def cb(state):
+        if state.depth == 2:
+            per_tree.append([])
+        per_tree[-1].append(state)
+
+    gbt.fit(table, y, level_callback=cb)
+    return _level_rows(per_tree), time.perf_counter() - t0
+
+
+def run(m=20_000, k=10, n_trees=20, max_depth=6, n_bins=64, top_rate=0.1,
+        other_rate=0.1, seed=0, out="BENCH_goss.json"):
+    cols, y = make_regression(m, k, seed=seed, teacher_depth=7, noise=0.5)
+    (tr_c, tr_y), (va_c, va_y), _ = train_val_test_split(cols, y, seed=seed)
+    table = fit_bins(tr_c, max_num_bins=n_bins)
+    vb = transform(va_c, table)
+    cfg = TreeConfig(max_depth=max_depth, task="regression_variance")
+    rmse = lambda p: float(np.sqrt(((p - va_y) ** 2).mean()))
+
+    full = GradientBoostedTrees(n_trees=n_trees, config=cfg, seed=seed)
+    full_rows, full_s = _fit_counting(full, table, tr_y)
+    rmse_full = rmse(full.predict(vb))
+
+    goss = GradientBoostedTrees(
+        n_trees=n_trees, config=cfg, seed=seed,
+        goss=GossConfig(top_rate=top_rate, other_rate=other_rate))
+    goss_rows, goss_s = _fit_counting(goss, table, tr_y)
+    rmse_goss = rmse(goss.predict(vb))
+
+    rmse_base = rmse(np.full_like(va_y, np.asarray(tr_y).mean()))
+    tot_full, tot_goss = sum(full_rows), sum(goss_rows)
+    report = dict(
+        config=dict(m=m, k=k, n_trees=n_trees, max_depth=max_depth,
+                    n_bins=n_bins, top_rate=top_rate, other_rate=other_rate,
+                    seed=seed),
+        full_rows_per_tree=full_rows, goss_rows_per_tree=goss_rows,
+        total_full_rows=tot_full, total_goss_rows=tot_goss,
+        scatter_work_ratio=round(tot_full / max(tot_goss, 1), 3),
+        rmse_full=round(rmse_full, 4), rmse_goss=round(rmse_goss, 4),
+        rmse_base=round(rmse_base, 4),
+        rmse_ratio=round(rmse_goss / max(rmse_full, 1e-9), 4),
+        wall_full_s=round(full_s, 2), wall_goss_s=round(goss_s, 2),
+    )
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print("goss,metric,full,goss")
+    print(f"goss,scatter_rows,{tot_full},{tot_goss}")
+    print(f"goss,rmse,{report['rmse_full']},{report['rmse_goss']}")
+    print(f"goss_total,scatter {tot_full} -> {tot_goss} "
+          f"({report['scatter_work_ratio']}x less), rmse "
+          f"{report['rmse_full']} -> {report['rmse_goss']} "
+          f"({report['rmse_ratio']}x, mean-predictor {report['rmse_base']}),"
+          f" wall {report['wall_full_s']}s -> {report['wall_goss_s']}s,"
+          f" -> {out}")
+    return report
+
+
+def gate(baseline_path="BENCH_goss.json"):
+    """Blocking CI gate: smoke run vs the committed baseline.
+
+    Blocks on BOTH acceptance axes — the scatter-work ratio (>= the 2x
+    floor and >= BASELINE_SLACK of the committed baseline) and the
+    validation RMSE (goss <= full * RMSE_TOL).  Writes its own report to a
+    throwaway path so a regressed run can never ratchet the committed
+    baseline down (the bench_subtraction no-self-ratchet rule)."""
+    baseline = None
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    report = run(**SMOKE, out=os.path.join(
+        tempfile.gettempdir(), "BENCH_goss_gate.json"))
+    ratio = report["scatter_work_ratio"]
+    ok = ratio >= MIN_RATIO
+    lines = [f"goss-gate: smoke scatter-work ratio {ratio}x "
+             f"(floor {MIN_RATIO}x) -> {'OK' if ok else 'FAIL'}"]
+    # the relative tolerance alone can sit above the mean-predictor RMSE at
+    # smoke shapes, so also require GOSS to actually learn: a collapse to
+    # the mean (degenerate sampling/weights) must fail the gate outright
+    want_rmse = min(RMSE_TOL * report["rmse_full"],
+                    BASE_BEAT * report["rmse_base"])
+    rmse_ok = report["rmse_goss"] <= want_rmse
+    ok = ok and rmse_ok
+    lines.append(f"goss-gate: rmse {report['rmse_goss']} (full "
+                 f"{report['rmse_full']}, mean-predictor "
+                 f"{report['rmse_base']}, require <= {round(want_rmse, 4)})"
+                 f" -> {'OK' if rmse_ok else 'FAIL'}")
+    if baseline is None:
+        lines.append(f"goss-gate: no baseline at {baseline_path} "
+                     "(floor checks only)")
+    elif baseline.get("config") != report["config"]:
+        lines.append("goss-gate: baseline config differs (floor checks only)")
+    else:
+        want = BASELINE_SLACK * baseline["scatter_work_ratio"]
+        rel_ok = ratio >= want
+        ok = ok and rel_ok
+        lines.append(f"goss-gate: baseline ratio "
+                     f"{baseline['scatter_work_ratio']}x, require >= "
+                     f"{round(want, 3)}x -> {'OK' if rel_ok else 'FAIL'}")
+    print("\n".join(lines))
+    return 0 if ok else 1
+
+
+def main():
+    if "--gate" in sys.argv:
+        sys.exit(gate())
+    if "--smoke" in sys.argv:
+        return run(**SMOKE)
+    return run()
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import bench_selection, bench_udt_cls, bench_udt_reg
-from benchmarks import bench_kernels, bench_subtraction
+from benchmarks import bench_goss, bench_kernels, bench_subtraction
 
 
 def main() -> None:
@@ -55,6 +55,14 @@ def main() -> None:
     else:   # reduced-scale default, like the roster benches above
         bench_subtraction.run(m=8_000, k=8, c=3, max_depth=7,
                               onehot_m=3_000)
+
+    print("# GOSS-sampled boosting (writes BENCH_goss.json)")
+    if smoke:
+        bench_goss.run(**bench_goss.SMOKE)
+    elif full:
+        bench_goss.run()
+    else:   # reduced-scale default
+        bench_goss.run(m=8_000, k=8, n_trees=10, max_depth=6)
 
     if not smoke:
         print("# kernel micro-bench")

@@ -21,3 +21,6 @@ from repro.core.split import (  # noqa: F401
 from repro.core.tree import Tree, TreeConfig, build_tree, BuildState  # noqa: F401
 from repro.core.predict import predict_bins, paths  # noqa: F401
 from repro.core.tuning import tune, toot_grid, prune_stats, TuneResult  # noqa: F401
+from repro.core.forest import (  # noqa: F401
+    GossConfig, GradientBoostedTrees, RandomForest,
+)

@@ -141,9 +141,18 @@ def build_tree_distributed(table: BinnedTable, y,
                            level_callback=None) -> Tree:
     """Distributed UDT training.  Produces the SAME tree as build_tree
     (tests/test_distributed.py asserts exact agreement) while sharding
-    examples over ``dist.data_axes`` and features over ``dist.model_axis``."""
+    examples over ``dist.data_axes`` and features over ``dist.model_axis``.
+    Per-example sample weights are not distributed yet (ROADMAP: GOSS)."""
+    if config.min_child_weight and config.select_backend == "pallas":
+        raise ValueError("min_child_weight needs select_backend='jnp' (the "
+                         "fused split-scan kernel has no weight floor)")
     bins_np, stats_np, lbins_np, yv_np, c, n_label_bins = _prepare(
         table, y, config, n_classes)
+    # the distributed build stages inputs on host (padding below mutates in
+    # place); _prepare may hand back device arrays for regression_variance
+    bins_np, stats_np, lbins_np, yv_np = (
+        np.asarray(bins_np), np.asarray(stats_np), np.asarray(lbins_np),
+        np.asarray(yv_np))
     m, k = bins_np.shape
     b = int(table.n_bins)
 
@@ -186,7 +195,8 @@ def build_tree_distributed(table: BinnedTable, y,
               max_depth=config.max_depth, max_nodes=max_nodes,
               hist_backend=config.hist_backend,
               select_backend=config.select_backend,
-              n_label_bins=n_label_bins)
+              n_label_bins=n_label_bins,
+              min_child_weight=config.min_child_weight)
 
     step_cache: dict = {}
     route_fn = make_sharded_route(mesh, dist)

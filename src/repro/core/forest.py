@@ -15,20 +15,32 @@ Both ensembles go through ``build_tree`` unchanged, so they inherit the
 sibling-subtraction fast path (TreeConfig.sibling_subtraction, on by
 default): per-tree histogram scatter work drops >= 2x per level, which
 multiplies across the whole ensemble.
+
+``GradientBoostedTrees`` additionally supports GOSS (Gradient-based
+One-Side Sampling, cf. LightGBM and the random-sampling split finding of
+arXiv:2108.08790) via ``GossConfig``: each tree trains on the top-``a``
+fraction of examples by |gradient| plus a ``b`` fraction sampled from the
+remainder, the latter weighted by ``(1-a)/b`` so weighted statistics stay
+unbiased — see GossConfig for the math.  The boosting loop is
+device-resident: residuals, predictions, gradient ranking, and sampling
+stay jax Arrays across trees, and ensemble prediction batches every tree's
+walk on device with a single host transfer at the end.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.binning import BinnedTable
-from repro.core.predict import predict_bins
+from repro.core.predict import WALK_FIELDS, _walk, predict_bins
 from repro.core.tree import Tree, TreeConfig, build_tree
 
-__all__ = ["RandomForest", "GradientBoostedTrees"]
+__all__ = ["RandomForest", "GradientBoostedTrees", "GossConfig"]
 
 
 def _subsample_table(table: BinnedTable, feat_mask: np.ndarray) -> BinnedTable:
@@ -82,32 +94,170 @@ class RandomForest:
         return votes.argmax(axis=1)
 
 
+@dataclasses.dataclass(frozen=True)
+class GossConfig:
+    """Gradient-based One-Side Sampling for GradientBoostedTrees.
+
+    Each boosting round keeps the ``top_rate`` (= ``a``) fraction of
+    examples with the largest |gradient| at weight 1, plus an
+    ``other_rate`` (= ``b``) fraction sampled uniformly from the remaining
+    small-gradient examples, weighted by the amplification factor
+
+        w = (1 - a) / b
+
+    so that any weighted statistic over the sample — a histogram channel, a
+    node count, a label sum — is an unbiased estimate of the same statistic
+    over the full data: the (1-a)M small-gradient examples are represented
+    by bM draws, each standing in for exactly (1-a)/b of them.  The weight
+    enters the histogram scatter itself (``build_tree(sample_weight=...)``
+    -> the in-kernel weight channel of kernels/histogram.py), so the
+    amplification is exact, not a post-selection rescale.
+
+    Composition with sibling subtraction: a weighted build's histogram
+    channels are float weighted sums, which keeps subtraction eligible only
+    under the float-tolerance contract — i.e. for the boosted-ensemble task
+    ``regression_variance`` (see core.tree._subtract_eligible).  Weighted
+    *classification* would break its bit-exactness contract, so sampling
+    disables subtraction eligibility there.  In the supported composed mode
+    the smaller-child scatter runs over just the (a + b)M sampled rows:
+    the two reductions multiply (~2x from subtraction, ~1/(a+b) from GOSS).
+    """
+    top_rate: float = 0.2
+    other_rate: float = 0.1
+
+    def __post_init__(self):
+        if not 0.0 <= self.top_rate < 1.0:
+            raise ValueError(f"top_rate must be in [0, 1), got {self.top_rate}")
+        # tiny slack so e.g. (0.9, 0.1) survives 1.0 - 0.9 != 0.1 in floats
+        if not 0.0 < self.other_rate <= 1.0 - self.top_rate + 1e-9:
+            raise ValueError("other_rate must be in (0, 1 - top_rate], got "
+                             f"{self.other_rate}")
+
+    @property
+    def amplification(self) -> float:
+        """The small-gradient sample weight ``(1 - a) / b``."""
+        return (1.0 - self.top_rate) / self.other_rate
+
+    def sample_sizes(self, m: int) -> tuple[int, int]:
+        """(top_n, other_n) for an [M] gradient vector — static per fit, so
+        every tree of the ensemble shares one compiled build.  ``other_n``
+        is 0 when the top set already covers every row (ceil rounding at
+        tiny M): re-drawing an already-selected row would double-count it."""
+        top_n = min(m, int(math.ceil(self.top_rate * m)))
+        other_n = min(m - top_n, max(1, int(math.ceil(self.other_rate * m))))
+        return top_n, other_n
+
+
+@functools.partial(jax.jit, static_argnames=("top_n", "other_n", "amp"))
+def _goss_sample(grad, key, *, top_n, other_n, amp):
+    """Device-side GOSS draw: indices [top_n + other_n] and their weights.
+
+    The top-|gradient| set comes from one ``top_k``; the uniform remainder
+    re-uses ``top_k`` over random keys with the top set masked out (an
+    O(M log M)-free approximation of choice-without-replacement that stays
+    fully on device and is deterministic under a fixed PRNG key).
+    """
+    scores = jax.random.uniform(key, grad.shape)
+    if top_n:
+        _, top_idx = jax.lax.top_k(jnp.abs(grad), top_n)
+        scores = scores.at[top_idx].set(-1.0)
+    else:
+        top_idx = jnp.zeros((0,), dtype=jnp.int32)
+    if other_n:
+        _, other_idx = jax.lax.top_k(scores, other_n)
+    else:
+        other_idx = jnp.zeros((0,), dtype=jnp.int32)
+    idx = jnp.concatenate([top_idx.astype(jnp.int32),
+                           other_idx.astype(jnp.int32)])
+    w = jnp.concatenate([jnp.ones((top_n,), jnp.float32),
+                         jnp.full((other_n,), amp, jnp.float32)])
+    return idx, w
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps",))
+def _ensemble_predict(stacked, bins, n_num, lr, base, *, num_steps):
+    """Batched Algorithm-7 walk over every tree of the ensemble: one vmap
+    over the stacked [T, max_nodes] tree arrays, one [T, M] leaf-label
+    tensor, one weighted reduction — the whole ensemble prediction is a
+    single device computation (callers transfer the [M] result once)."""
+    no_limit = jnp.int32(1 << 30)
+    per_tree = jax.vmap(
+        lambda ta: _walk(ta, bins, n_num, no_limit, jnp.int32(0),
+                         num_steps=num_steps))(stacked)        # [T, M]
+    return base + lr * per_tree.sum(axis=0)
+
+
 @dataclasses.dataclass
 class GradientBoostedTrees:
+    """Gradient boosting on squared loss with variance-split UDTs.
+
+    The fit loop is device-resident: predictions, residuals (= negative
+    gradients), the GOSS |gradient| ranking and the sample draw all stay
+    jax Arrays from tree to tree — the only per-tree host traffic is the
+    builder's level-loop scalars.  With ``goss`` set, each tree trains on
+    the GOSS subset with the exact ``(1-a)/b`` weight channel (see
+    GossConfig); tree shapes are static across rounds, so the whole
+    ensemble reuses one compiled build + one compiled predict step.
+    """
     n_trees: int = 20
     learning_rate: float = 0.3
     config: TreeConfig = dataclasses.field(
         default_factory=lambda: TreeConfig(max_depth=6,
                                            task="regression_variance"))
+    goss: GossConfig | None = None
     seed: int = 0
 
-    def fit(self, table: BinnedTable, y):
-        y = np.asarray(y, dtype=np.float32)
-        self.base = float(y.mean())
+    def fit(self, table: BinnedTable, y, level_callback=None):
+        bins = jnp.asarray(table.bins)
+        m = bins.shape[0]
+        y = jnp.asarray(y, dtype=jnp.float32)
+        base = jnp.mean(y)
+        self.n_num = np.asarray(table.n_num)
+        n_num_d = jnp.asarray(self.n_num)
+        dev_table = dataclasses.replace(table, bins=bins)
+        pred = jnp.broadcast_to(base, y.shape)
+        key = jax.random.PRNGKey(self.seed)
+        if self.goss is not None:
+            top_n, other_n = self.goss.sample_sizes(m)
+            amp = self.goss.amplification
         self.trees: list[Tree] = []
-        self.n_num = table.n_num
-        pred = np.full_like(y, self.base)
+        self._stacked = None                    # predict_device's lazy cache
         for _ in range(self.n_trees):
-            resid = y - pred
-            tree = build_tree(table, resid, self.config)
+            resid = y - pred                    # -gradient of squared loss
+            if self.goss is None:
+                tree = build_tree(dev_table, resid, self.config,
+                                  level_callback=level_callback)
+            else:
+                key, sub = jax.random.split(key)
+                idx, w = _goss_sample(resid, sub, top_n=top_n,
+                                      other_n=other_n, amp=amp)
+                sub_table = dataclasses.replace(
+                    table, bins=jnp.take(bins, idx, axis=0))
+                tree = build_tree(sub_table, jnp.take(resid, idx),
+                                  self.config, sample_weight=w,
+                                  level_callback=level_callback)
             self.trees.append(tree)
-            step = np.asarray(predict_bins(tree, table.bins, table.n_num))
-            pred = pred + self.learning_rate * step
+            # full-data predictions update on device; num_steps is the
+            # static depth bound so no per-tree host sync happens here
+            pred = pred + self.learning_rate * predict_bins(
+                tree, bins, n_num_d, num_steps=self.config.max_depth)
+        self.base = float(base)                 # one scalar sync at the end
         return self
 
+    def predict_device(self, bins) -> jax.Array:
+        """Ensemble prediction as a device Array (no host transfer).  The
+        stacked [T, max_nodes] tree arrays are built once on first use
+        (trees are immutable after fit), so a serving loop pays only the
+        jitted walk per batch."""
+        if getattr(self, "_stacked", None) is None:
+            self._stacked = {f: jnp.stack([getattr(t, f) for t in self.trees])
+                             for f in WALK_FIELDS}
+        return _ensemble_predict(
+            self._stacked, jnp.asarray(bins), jnp.asarray(self.n_num),
+            jnp.float32(self.learning_rate), jnp.float32(self.base),
+            num_steps=max(1, self.config.max_depth))
+
     def predict(self, bins):
-        pred = np.full((bins.shape[0],), self.base, dtype=np.float32)
-        for tree in self.trees:
-            pred += self.learning_rate * np.asarray(
-                predict_bins(tree, bins, self.n_num))
-        return pred
+        """Batched ensemble prediction; ONE device->host transfer for the
+        whole forest (the per-tree transfer loop was the old hot spot)."""
+        return np.asarray(self.predict_device(bins))

@@ -28,6 +28,11 @@ backend: it hands the parent rows to the kernel and the derivation plus the
 pair interleave happen in the kernel's epilogue straight out of VMEM, so
 the derived sibling never exists in HBM as a separate tensor (the
 single-shard fast path of the tree builder).
+
+All three entry points take an optional ``weights`` [M] channel (GOSS's
+``(1-a)/b`` amplification): rows accumulate ``w[i] * stats[i]``, applied
+in-kernel on the pallas backend.  ``weights=None`` traces the identical
+unweighted computation, preserving the bit-exactness contracts above.
 """
 from __future__ import annotations
 
@@ -51,8 +56,19 @@ def moment_stats(y: jax.Array) -> jax.Array:
     return jnp.stack([jnp.ones_like(y), y, y * y], axis=-1)
 
 
-def _segment_backend(bins, stats, slot, num_slots, n_bins):
+def _weighted(stats, weights):
+    """Apply the optional per-example weight channel to statistic rows.
+
+    ``weights=None`` is the identity and emits NO op, so the unweighted
+    path's jaxpr (and its bit-exactness contract) is untouched."""
+    if weights is None:
+        return stats
+    return stats * weights[:, None].astype(jnp.float32)
+
+
+def _segment_backend(bins, stats, slot, num_slots, n_bins, weights=None):
     m, k = bins.shape
+    stats = _weighted(stats, weights)
     c = stats.shape[-1]
     base = slot * n_bins                                   # [M]
     idx = base[:, None] + bins                             # [M, K]
@@ -66,8 +82,9 @@ def _segment_backend(bins, stats, slot, num_slots, n_bins):
     return h.reshape(k, num_slots, n_bins, c).transpose(1, 0, 2, 3)
 
 
-def _onehot_backend(bins, stats, slot, num_slots, n_bins):
+def _onehot_backend(bins, stats, slot, num_slots, n_bins, weights=None):
     m, k = bins.shape
+    stats = _weighted(stats, weights)
     c = stats.shape[-1]
     base = slot * n_bins
     idx = jnp.where(slot[:, None] < 0, num_slots * n_bins, base[:, None] + bins)
@@ -76,9 +93,10 @@ def _onehot_backend(bins, stats, slot, num_slots, n_bins):
     return h.reshape(k, num_slots, n_bins, c).transpose(1, 0, 2, 3)
 
 
-def _pallas_backend(bins, stats, slot, num_slots, n_bins):
+def _pallas_backend(bins, stats, slot, num_slots, n_bins, weights=None):
     from repro.kernels import ops as kops
-    return kops.histogram(bins, stats, slot, num_slots=num_slots, n_bins=n_bins)
+    return kops.histogram(bins, stats, slot, num_slots=num_slots,
+                          n_bins=n_bins, weights=weights)
 
 
 _BACKENDS = {
@@ -91,7 +109,7 @@ _BACKENDS = {
 @functools.partial(jax.jit, static_argnames=("num_slots", "n_bins", "backend"))
 def node_histogram(bins: jax.Array, stats: jax.Array, slot: jax.Array, *,
                    num_slots: int, n_bins: int,
-                   backend: str = "segment") -> jax.Array:
+                   backend: str = "segment", weights=None) -> jax.Array:
     """Accumulate per-(node-slot, feature, bin) statistic rows.
 
     Args:
@@ -99,17 +117,23 @@ def node_histogram(bins: jax.Array, stats: jax.Array, slot: jax.Array, *,
       stats: [M, C] float32 statistic rows per example.
       slot:  [M] int32 node slot in [0, num_slots) or -1 if the example's
              node is not in the current chunk (finalised leaf / other chunk).
+      weights: optional [M] float32 per-example weight channel: rows
+             accumulate ``w[i] * stats[i]`` (GOSS's ``(1-a)/b`` amplification
+             is exact because it enters before accumulation, not as a
+             post-hoc rescale).  ``None`` traces the identical unweighted
+             computation (jaxpr-asserted in tests/test_goss.py).
     Returns:
       H: [num_slots, K, n_bins, C] float32.
     """
-    return _BACKENDS[backend](bins, stats, slot, num_slots, n_bins)
+    return _BACKENDS[backend](bins, stats, slot, num_slots, n_bins, weights)
 
 
 @functools.partial(jax.jit, static_argnames=("num_slots", "n_bins", "backend"))
 def node_histogram_smaller_child(bins: jax.Array, stats: jax.Array,
                                  slot: jax.Array, compute: jax.Array, *,
                                  num_slots: int, n_bins: int,
-                                 backend: str = "segment") -> jax.Array:
+                                 backend: str = "segment",
+                                 weights=None) -> jax.Array:
     """Scatter statistics only for the per-pair "compute me" child slots.
 
     The level-synchronous builder allocates children in sibling pairs at
@@ -125,7 +149,10 @@ def node_histogram_smaller_child(bins: jax.Array, stats: jax.Array,
       (classification one-hots, moment channel 0) the subtraction is exact
       in float32 below 2**24 examples, so the derived histogram is
       bit-identical to a full recompute.  Float moment channels (sum_y,
-      sum_y2) agree to accumulation-order tolerance.
+      sum_y2) agree to accumulation-order tolerance.  With a ``weights``
+      channel every channel is a float weighted sum, so the whole contract
+      downgrades to accumulation-order tolerance (see
+      core.tree._subtract_eligible for how the builder gates on this).
     """
     if num_slots % 2:
         raise ValueError("pair packing needs an even slot count")
@@ -136,10 +163,12 @@ def node_histogram_smaller_child(bins: jax.Array, stats: jax.Array,
         # in-kernel remap: the [M] slot vector is never rewritten in HBM and
         # skipped slots occupy no VMEM (the output block is the packed axis).
         return kops.histogram(bins, stats, slot, num_slots=num_slots // 2,
-                              n_bins=n_bins, slot_map=slot_map)
+                              n_bins=n_bins, slot_map=slot_map,
+                              weights=weights)
     packed = jnp.where(slot >= 0,
                        slot_map[jnp.clip(slot, 0, num_slots - 1)], -1)
-    return _BACKENDS[backend](bins, stats, packed, num_slots // 2, n_bins)
+    return _BACKENDS[backend](bins, stats, packed, num_slots // 2, n_bins,
+                              weights)
 
 
 @functools.partial(jax.jit, static_argnames=("num_slots", "n_bins", "backend"))
@@ -147,7 +176,8 @@ def node_histogram_sibling_fused(bins: jax.Array, stats: jax.Array,
                                  slot: jax.Array, compute: jax.Array,
                                  phist_pairs: jax.Array, *,
                                  num_slots: int, n_bins: int,
-                                 backend: str = "pallas") -> jax.Array:
+                                 backend: str = "pallas",
+                                 weights=None) -> jax.Array:
     """Smaller-child scatter + in-kernel sibling derivation, in one pass.
 
     ``phist_pairs`` [num_slots//2, K, B, C] holds each sibling pair's parent
@@ -163,7 +193,9 @@ def node_histogram_sibling_fused(bins: jax.Array, stats: jax.Array,
     fused kernel) take the reference jnp path: packed scatter, subtract,
     interleave.  Exactness contract as ``node_histogram_smaller_child``:
     bit-identical for integer-count channels below 2**24 examples,
-    accumulation-order tolerance for float moment channels.
+    accumulation-order tolerance for float moment channels (and for ALL
+    channels when a ``weights`` channel is given — ``phist_pairs`` must then
+    carry the same weighted statistics).
     """
     if num_slots % 2:
         raise ValueError("pair packing needs an even slot count")
@@ -174,10 +206,11 @@ def node_histogram_sibling_fused(bins: jax.Array, stats: jax.Array,
                              jnp.arange(num_slots, dtype=jnp.int32) // 2, -1)
         return kops.histogram(bins, stats, slot, num_slots=num_slots // 2,
                               n_bins=n_bins, slot_map=slot_map,
-                              phist=phist_pairs, side=small_is_left)
+                              phist=phist_pairs, side=small_is_left,
+                              weights=weights)
     h_small = node_histogram_smaller_child(bins, stats, slot, compute,
                                            num_slots=num_slots, n_bins=n_bins,
-                                           backend=backend)
+                                           backend=backend, weights=weights)
     h_der = phist_pairs - h_small
     sl = small_is_left[:, None, None, None]
     return jnp.stack([jnp.where(sl, h_small, h_der),

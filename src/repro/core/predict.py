@@ -16,7 +16,12 @@ import jax.numpy as jnp
 from repro.core.split import evaluate_predicate
 from repro.core.tree import Tree
 
-__all__ = ["predict_bins", "paths"]
+__all__ = ["predict_bins", "paths", "WALK_FIELDS"]
+
+# the Tree fields the Algorithm-7 walk reads; ensemble callers (core.forest)
+# stack exactly these per tree, so the set lives in ONE place
+WALK_FIELDS = ("feat", "op", "tbin", "label", "count", "left", "right",
+               "leaf")
 
 
 def _descend(tree_arrays, bins, n_num, node):
@@ -46,15 +51,20 @@ def _walk(tree_arrays, bins, n_num, dmax, smin, *, num_steps):
 
 
 def predict_bins(tree: Tree, bins, n_num, *, max_depth: int = 1 << 30,
-                 min_samples_split: int = 0) -> jax.Array:
-    """Predict labels for pre-binned examples under runtime hyper-params."""
+                 min_samples_split: int = 0,
+                 num_steps: int | None = None) -> jax.Array:
+    """Predict labels for pre-binned examples under runtime hyper-params.
+
+    ``num_steps`` overrides the walk length (any static bound >= the tree's
+    depth works; extra steps stay at the leaf).  The default reads the depth
+    array off-device, so device-resident loops — the boosted-ensemble fit —
+    pass their config's max_depth instead to avoid a per-tree host sync."""
     arrays = tree._asdict()
-    steps = max(1, tree.max_tree_depth)
-    return _walk({k: arrays[k] for k in
-                  ("feat", "op", "tbin", "label", "count", "left", "right", "leaf")},
+    steps = num_steps if num_steps is not None else max(1, tree.max_tree_depth)
+    return _walk({k: arrays[k] for k in WALK_FIELDS},
                  jnp.asarray(bins), jnp.asarray(n_num),
                  jnp.int32(max_depth), jnp.int32(min_samples_split),
-                 num_steps=steps)
+                 num_steps=max(1, steps))
 
 
 @functools.partial(jax.jit, static_argnames=("num_steps",))
@@ -78,6 +88,5 @@ def paths(tree: Tree, bins, n_num):
     semantics (columns past the leaf repeat the leaf).  T = tree depth."""
     arrays = tree._asdict()
     steps = max(1, tree.max_tree_depth)
-    return _paths({k: arrays[k] for k in
-                   ("feat", "op", "tbin", "label", "count", "left", "right", "leaf")},
+    return _paths({k: arrays[k] for k in WALK_FIELDS},
                   jnp.asarray(bins), jnp.asarray(n_num), num_steps=steps)

@@ -78,6 +78,17 @@ def best_splits(hist: jax.Array, n_num: jax.Array, n_cat: jax.Array, *,
     hist: [S, K, B, C] statistics; for classification C = #classes and the
     example count of a side is ``stats.sum(-1)``; for regression moments the
     count is channel 0.
+
+    Weighted histograms (GOSS-sampled boosting) need NO changes here, which
+    is what makes the ``(1-a)/b`` amplification exact rather than a post-hoc
+    rescale: every heuristic is a function of the channel sums alone, and a
+    weighted channel sum IS the unbiased estimate of the full-data sum, so
+    the scored gain is exactly the gain of the estimated full-data split.
+    The count channels are then float *weighted* counts: ``min_leaf``
+    bounds the estimated full-data example count of each side (LightGBM's
+    semantics), and ``min_child_weight`` adds a strict floor on the same
+    weighted scale — useful to keep a handful of amplified small-gradient
+    examples from supporting a split on their own.
     """
     h_fn = H.get(heuristic)
     s, k, b, c = hist.shape

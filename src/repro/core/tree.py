@@ -68,6 +68,11 @@ class TreeConfig:
     # subtraction does not apply there.
     sibling_subtraction: bool = True
     sub_cache_bytes: int = 1 << 28    # skip caching levels wider than this
+    # Weighted builds only (build_tree's sample_weight, e.g. GOSS): a strict
+    # floor on the WEIGHTED example count of both split sides, preventing a
+    # couple of (1-a)/b-amplified small-gradient examples from supporting a
+    # split alone.  0.0 disables it; jnp select backend only.
+    min_child_weight: float = 0.0
 
 
 class Tree(NamedTuple):
@@ -162,13 +167,15 @@ def _label_split_thresholds(lhist):
                      "min_samples_split", "min_samples_leaf", "max_depth",
                      "max_nodes", "hist_backend", "select_backend",
                      "n_label_bins", "data_axes", "model_axis",
-                     "slot_scatter", "use_sub", "want_hist"))
+                     "slot_scatter", "use_sub", "want_hist", "weighted",
+                     "min_child_weight"))
 def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
-                n_cat, chunk_start, chunk_n, next_free, depth, *,
+                n_cat, chunk_start, chunk_n, next_free, depth, weights=None, *,
                 num_slots, n_bins, heuristic, task, min_samples_split,
                 min_samples_leaf, max_depth, max_nodes, hist_backend,
                 select_backend, n_label_bins, data_axes=(), model_axis=None,
-                slot_scatter=False, use_sub=False, want_hist=False):
+                slot_scatter=False, use_sub=False, want_hist=False,
+                weighted=False, min_child_weight=0.0):
     """Process node slots [chunk_start, chunk_start+chunk_n).
 
     Returns (arrays, n_children, hist).  All shapes static; chunk_start /
@@ -186,6 +193,14 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
     sharded over (pair, feature), so both halvings compose.  ``want_hist``
     returns the chunk's full histogram so the build loop can cache it for
     the next level (a scalar 0 otherwise).
+
+    ``weighted`` + ``weights`` ([M] f32) switch on the per-example weight
+    channel: histograms accumulate ``w[i] * stats[i]`` (in-kernel on the
+    pallas backend), so every count / label / purity statistic below is the
+    GOSS-amplified unbiased estimate of its full-data value, and
+    ``min_samples_split`` / ``min_samples_leaf`` bound the estimated
+    full-data counts.  The smaller-child choice stays on RAW routed rows
+    (scatter cost is rows, not weight).
     """
     s = num_slots
     k_local = bins.shape[1]
@@ -227,10 +242,14 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
         return jax.tree.map(g, tree)
 
     def select(hist, n_num_, n_cat_, *, heuristic, min_leaf):
-        base = (split_mod.best_splits_kernel if select_backend == "pallas"
-                else best_splits)
-        dec = base(hist, n_num_, n_cat_, heuristic=heuristic,
-                   min_leaf=min_leaf)
+        if select_backend == "pallas":
+            dec = split_mod.best_splits_kernel(hist, n_num_, n_cat_,
+                                               heuristic=heuristic,
+                                               min_leaf=min_leaf)
+        else:
+            dec = best_splits(hist, n_num_, n_cat_, heuristic=heuristic,
+                              min_leaf=min_leaf,
+                              min_child_weight=min_child_weight)
         if model_axis is None:
             return dec
         # feature-parallel: each shard picked its best LOCAL feature; a tiny
@@ -265,13 +284,15 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
     in_chunk = slot_ids < chunk_n
     node_ids = jnp.where(in_chunk, chunk_start + slot_ids, max_nodes)
 
+    w = weights if weighted else None
+
     def build_hist(stats_rows):
         """One level-chunk histogram: full scatter, or smaller-child scatter
         plus sibling subtraction when the parent cache is available."""
         if not use_sub:
             return reduce_data(node_histogram(
                 bins, stats_rows, slot, num_slots=s, n_bins=n_bins,
-                backend=hist_backend))
+                backend=hist_backend, weights=w))
         # per-node routed-example counts decide which child to scatter; the
         # psum makes the argmin globally consistent across data shards.
         cnt = jax.ops.segment_sum(jnp.ones_like(slot, dtype=jnp.float32),
@@ -291,10 +312,10 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
             # (node_ids == max_nodes there).
             return node_histogram_sibling_fused(
                 bins, stats_rows, slot, compute, phist_pairs, num_slots=s,
-                n_bins=n_bins, backend=hist_backend)
+                n_bins=n_bins, backend=hist_backend, weights=w)
         h_small = node_histogram_smaller_child(
             bins, stats_rows, slot, compute, num_slots=s, n_bins=n_bins,
-            backend=hist_backend)                            # [s/2,K,B,C]
+            backend=hist_backend, weights=w)                 # [s/2,K,B,C]
         if scatter_on:
             # composed mode: reduce_scatter the PACKED pair axis -- half
             # the collective bytes of the dense slot_scatter AND half the
@@ -429,9 +450,23 @@ def _route_step(bins, assign, arrays, n_num, level_start, level_end, *,
 
 def _prepare(table: BinnedTable, y, config: TreeConfig,
              n_classes: int | None):
-    """Host-side input prep shared by the local and distributed builders."""
-    bins = np.asarray(table.bins)
+    """Input prep shared by the local and distributed builders.
+
+    ``table.bins`` / ``y`` may be numpy OR jax arrays; the
+    ``regression_variance`` task never touches the host (no label binning,
+    no transfers), which is what lets the boosted-ensemble loop in
+    core.forest hand residuals in as device Arrays tree after tree.  The
+    two paper tasks keep their host-side prep (classification needs the
+    class count, label-split regression pre-bins the labels once)."""
+    bins = table.bins
     m, k = bins.shape
+    if config.task == "regression_variance":
+        yv = jnp.asarray(y, dtype=jnp.float32)
+        # stats / lbins are dead operands for this task (the moment rows are
+        # formed from yv inside the level step); zeros keep the jit
+        # signature uniform and cost one deferred fill each.
+        return (bins, jnp.zeros((m, 3), jnp.float32),
+                jnp.zeros((m,), jnp.int32), yv, 3, 1)
     if config.task == "classification":
         y = np.asarray(y)
         c = int(n_classes if n_classes is not None else int(y.max()) + 1)
@@ -441,7 +476,7 @@ def _prepare(table: BinnedTable, y, config: TreeConfig,
         n_label_bins = 1
     else:
         yv = np.asarray(y, dtype=np.float32)
-        c = 3 if config.task == "regression_variance" else 2
+        c = 2
         stats = np.zeros((m, c), dtype=np.float32)
         # bin the labels once (the paper pre-sorts them once) for Alg. 6
         yy = np.asarray(y, dtype=np.float64)
@@ -458,13 +493,25 @@ def _prepare(table: BinnedTable, y, config: TreeConfig,
     return bins, stats, lbins, yv, c, n_label_bins
 
 
-def _subtract_eligible(config: TreeConfig, m: int) -> bool:
+def _subtract_eligible(config: TreeConfig, m: int,
+                       weighted: bool = False) -> bool:
     """Single source of truth for the sibling-subtraction gate (the local
     and distributed builders must agree or their bit-identical-tree
     contract breaks).  The label-split "regression" task recomputes its
     pseudo-class statistics every level, so the parent cache is invalid;
     past 2**24 examples float32 integer-count accumulation can round, so
-    the derived sibling would no longer be bit-identical to a recompute."""
+    the derived sibling would no longer be bit-identical to a recompute.
+
+    Weighted builds (GOSS): every channel becomes a float weighted sum, so
+    a derived sibling is only accumulation-order close to a recompute.
+    ``regression_variance`` — the boosted-ensemble task — already carries
+    that tolerance contract on its float moment channels, so sampling
+    composes with subtraction there (the smaller-child scatter then runs
+    over the sampled subset only).  Weighted *classification* would
+    silently downgrade its bit-exactness contract, so subtraction is
+    disabled for it instead."""
+    if weighted and config.task != "regression_variance":
+        return False
     return (config.sibling_subtraction and config.task != "regression"
             and m < 1 << 24)
 
@@ -544,10 +591,27 @@ def _grow(step, route, arrays, assign, s_cap, max_nodes, level_callback,
 
 def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
                n_classes: int | None = None,
-               level_callback=None, resume: "BuildState | None" = None) -> Tree:
+               level_callback=None, resume: "BuildState | None" = None,
+               sample_weight=None) -> Tree:
     """Train a UDT.  ``y`` is int class ids (classification) or float
     targets (regression modes).  ``level_callback(BuildState)`` is invoked
-    after each completed level (checkpointing / progress hooks)."""
+    after each completed level (checkpointing / progress hooks).
+
+    ``sample_weight`` (optional [M] f32, e.g. GOSS's per-example
+    amplification) weights every histogram row, so node counts, labels and
+    split scores become the weighted — for GOSS, unbiased full-data —
+    estimates; ``min_samples_split`` / ``min_samples_leaf`` then bound
+    weighted counts.  Supported for "classification" (disables the
+    sibling-subtraction fast path: its bit-exactness contract does not
+    survive float weights) and "regression_variance" (subtraction stays on
+    under the float-tolerance contract); the label-split "regression" task
+    re-derives pseudo-classes per level and is unsupported."""
+    if sample_weight is not None and config.task == "regression":
+        raise ValueError("sample_weight is unsupported for the label-split "
+                         "'regression' task (use 'regression_variance')")
+    if config.min_child_weight and config.select_backend == "pallas":
+        raise ValueError("min_child_weight needs select_backend='jnp' (the "
+                         "fused split-scan kernel has no weight floor)")
     bins_np, stats_np, lbins_np, yv_np, c, n_label_bins = _prepare(
         table, y, config, n_classes)
     m, k = bins_np.shape
@@ -556,6 +620,8 @@ def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
     stats = jnp.asarray(stats_np)
     lbins = jnp.asarray(lbins_np)
     yv = jnp.asarray(yv_np)
+    weights = (jnp.asarray(sample_weight, dtype=jnp.float32)
+               if sample_weight is not None else None)
     n_num = jnp.asarray(table.n_num)
     n_cat = jnp.asarray(table.n_cat)
 
@@ -576,7 +642,8 @@ def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
         cursors = (0, 1, 1, 1)
 
     subtract = ((k * b * c * 4, config.sub_cache_bytes)
-                if _subtract_eligible(config, m) else None)
+                if _subtract_eligible(config, m, weights is not None)
+                else None)
 
     kw = dict(n_bins=b, heuristic=config.heuristic, task=config.task,
               min_samples_split=config.min_samples_split,
@@ -584,7 +651,8 @@ def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
               max_depth=config.max_depth, max_nodes=max_nodes,
               hist_backend=config.hist_backend,
               select_backend=config.select_backend,
-              n_label_bins=n_label_bins)
+              n_label_bins=n_label_bins, weighted=weights is not None,
+              min_child_weight=config.min_child_weight)
     dummy_pp = jnp.zeros((1, 1, 1, 1), dtype=jnp.float32)
 
     def step(arrays, assign, cs, cn, next_free, depth, num_slots, pp,
@@ -592,7 +660,7 @@ def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
         return _chunk_step(bins, stats, lbins, yv, assign, arrays,
                            pp if use_sub else dummy_pp, n_num,
                            n_cat, jnp.int32(cs), jnp.int32(cn),
-                           jnp.int32(next_free), jnp.int32(depth),
+                           jnp.int32(next_free), jnp.int32(depth), weights,
                            num_slots=num_slots, use_sub=use_sub,
                            want_hist=want_hist, **kw)
 

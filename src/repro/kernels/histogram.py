@@ -18,6 +18,12 @@ Layout notes (TPU tiling: last dim = 128 lanes, 2nd-to-last = 8 sublanes):
   * VMEM working set = onehot tile (Mt x Sc*B f32) + output block; the
     wrapper picks Sc so this fits the ~16 MiB VMEM budget.
 
+Optional per-example weight channel (``weights`` input): GOSS-sampled
+boosting accumulates ``w[i] * stats[i]`` rows, with the amplified
+small-gradient weight ``(1-a)/b`` applied to the [C, Mt] stats tile in VMEM
+right before the matmul — the weighted-stats tensor never exists in HBM and
+``weights=None`` compiles the exact pre-weighting kernel.
+
 Fused sibling-derivation epilogue (``phist``/``side`` inputs): the
 sibling-subtraction builder scatters only the smaller child of each split
 pair (packed pair axis, in-kernel ``slot_map`` remap) and derives the
@@ -61,9 +67,10 @@ DEFAULT_EXAMPLE_TILE = 512
 
 def _hist_kernel(bins_ref, stats_t_ref, slot_ref, *refs,
                  n_bins: int, slot_chunk: int, m_total: int,
-                 example_tile: int, n_tiles: int, has_remap: bool,
-                 fused: bool):
+                 example_tile: int, n_tiles: int, has_weights: bool,
+                 has_remap: bool, fused: bool):
     refs = list(refs)
+    weights_ref = refs.pop(0) if has_weights else None
     remap_ref = refs.pop(0) if has_remap else None
     phist_ref, side_ref = ((refs.pop(0), refs.pop(0)) if fused
                            else (None, None))
@@ -83,6 +90,13 @@ def _hist_kernel(bins_ref, stats_t_ref, slot_ref, *refs,
     bins = bins_ref[0, :]                                    # [Mt] i32
     slot = slot_ref[:]                                       # [Mt] i32
     stats_t = stats_t_ref[...]                               # [C, Mt] f32
+
+    if has_weights:
+        # per-example weight channel (GOSS amplification): scale the [C, Mt]
+        # stats tile once in VMEM; the weighted rows then flow through the
+        # same one-hot matmul (and epilogue) as the unweighted path, so the
+        # widened M x C weighted-stats tensor never exists in HBM.
+        stats_t = stats_t * weights_ref[:][None, :]          # [C, Mt]
 
     if has_remap:
         # masked-slot remap (sibling subtraction): slot ids are first mapped
@@ -130,9 +144,15 @@ def _hist_kernel(bins_ref, stats_t_ref, slot_ref, *refs,
     "num_slots", "n_bins", "slot_chunk", "example_tile", "interpret"))
 def histogram_pallas(bins, stats, slot, *, num_slots: int, n_bins: int,
                      slot_chunk: int = 16, example_tile: int = DEFAULT_EXAMPLE_TILE,
-                     interpret: bool = True, slot_map=None, phist=None,
-                     side=None):
+                     interpret: bool = True, weights=None, slot_map=None,
+                     phist=None, side=None):
     """bins [M,K] i32, stats [M,C] f32, slot [M] i32 -> H [S,K,B,C] f32.
+
+    ``weights`` (optional [M] f32) accumulates ``w[i] * stats[i]`` instead of
+    ``stats[i]``: the per-example weight channel of GOSS-sampled boosting.
+    The multiply happens on the [C, Mt] stats tile in VMEM, so weighting adds
+    no HBM traffic; ``None`` compiles the identical kernel as before (the
+    unweighted path stays bit-exact by construction).
 
     ``slot_map`` (optional [S_in] i32) remaps raw slot ids in-kernel: entry
     ``-1`` drops the row, entries must land in [0, num_slots).  The sibling-
@@ -165,6 +185,10 @@ def histogram_pallas(bins, stats, slot, *, num_slots: int, n_bins: int,
         pl.BlockSpec((example_tile,), lambda ki, sc, t: (t,)),
     ]
     operands = [bins_t, stats_t, slot_p]
+    if weights is not None:
+        w_p = jnp.pad(weights.astype(jnp.float32), (0, m_pad - m))
+        in_specs.append(pl.BlockSpec((example_tile,), lambda ki, sc, t: (t,)))
+        operands.append(w_p)
     if slot_map is not None:
         n_in = slot_map.shape[0]
         in_specs.append(pl.BlockSpec((n_in,), lambda ki, sc, t: (0,)))
@@ -194,6 +218,7 @@ def histogram_pallas(bins, stats, slot, *, num_slots: int, n_bins: int,
     out = pl.pallas_call(
         functools.partial(_hist_kernel, n_bins=n_bins, slot_chunk=slot_chunk,
                           m_total=m, example_tile=example_tile, n_tiles=n_t,
+                          has_weights=weights is not None,
                           has_remap=slot_map is not None, fused=fused),
         grid=(k, n_sc, n_t),
         in_specs=in_specs,

@@ -18,13 +18,16 @@ INTERPRET = jax.default_backend() != "tpu"
 
 
 def histogram(bins, stats, slot, *, num_slots, n_bins, slot_chunk=None,
-              slot_map=None, phist=None, side=None):
+              weights=None, slot_map=None, phist=None, side=None):
     """H[S,K,B,C] via the one-hot-MXU Pallas kernel (see kernels/histogram.py).
 
     slot_chunk defaults so the per-program onehot tile (Mt x Sc*B f32) stays
-    within a ~4 MiB VMEM budget.  ``slot_map`` ([S_in] i32 -> packed slot or
-    -1) is the masked-slot path used by sibling subtraction: skipped slots
-    are remapped away in-kernel and cost no VMEM traffic.
+    within a ~4 MiB VMEM budget.  ``weights`` ([M] f32 or None) is the
+    per-example weight channel: rows accumulate ``w[i] * stats[i]`` (the
+    multiply runs in-kernel on the VMEM stats tile).  ``slot_map`` ([S_in]
+    i32 -> packed slot or -1) is the masked-slot path used by sibling
+    subtraction: skipped slots are remapped away in-kernel and cost no VMEM
+    traffic.
 
     ``phist``/``side`` select the fused sibling-derivation epilogue:
     ``num_slots`` then counts packed pairs, ``phist`` [num_slots,K,B,C] is
@@ -40,8 +43,8 @@ def histogram(bins, stats, slot, *, num_slots, n_bins, slot_chunk=None,
         slot_chunk = max(1, min(num_slots, budget_lanes // per_slot))
     return histogram_pallas(bins, stats, slot, num_slots=num_slots,
                             n_bins=n_bins, slot_chunk=slot_chunk,
-                            interpret=INTERPRET, slot_map=slot_map,
-                            phist=phist, side=side)
+                            interpret=INTERPRET, weights=weights,
+                            slot_map=slot_map, phist=phist, side=side)
 
 
 def split_scan(hist, n_num, n_cat, *, heuristic="info_gain", min_leaf=1):

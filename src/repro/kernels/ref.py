@@ -14,10 +14,15 @@ from repro.core.split import NEG_INF
 __all__ = ["histogram_ref", "sibling_ref", "split_scan_ref"]
 
 
-def histogram_ref(bins, stats, slot, *, num_slots, n_bins):
-    """H[S, K, B, C] += stats[i] at (slot[i], k, bins[i,k]) — scatter oracle."""
+def histogram_ref(bins, stats, slot, *, num_slots, n_bins, weights=None):
+    """H[S, K, B, C] += w[i] * stats[i] at (slot[i], k, bins[i,k]) — scatter
+    oracle.  ``weights`` (optional [M] f32) is the per-example weight channel
+    (GOSS amplification); ``None`` is the exact unweighted path (no multiply
+    appears in the trace)."""
     m, k = bins.shape
     c = stats.shape[-1]
+    if weights is not None:
+        stats = stats * weights[:, None].astype(jnp.float32)
     idx = jnp.where(slot[:, None] < 0, num_slots * n_bins,
                     slot[:, None] * n_bins + bins)          # [M,K]
     oh = jax.nn.one_hot(idx, num_slots * n_bins, dtype=jnp.float32)
@@ -26,18 +31,20 @@ def histogram_ref(bins, stats, slot, *, num_slots, n_bins):
 
 
 def sibling_ref(bins, stats, slot, slot_map, phist, side, *, num_pairs,
-                n_bins):
+                n_bins, weights=None):
     """Oracle for the fused sibling-derivation epilogue.
 
     Packed smaller-child scatter (raw slots remapped through ``slot_map``,
     -1 drops the row), co-child derived as ``phist - H_small``, the pair
     interleaved to the full [2*num_pairs, K, B, C] child axis with
-    ``side[j]`` nonzero meaning the computed child is the left slot."""
+    ``side[j]`` nonzero meaning the computed child is the left slot.
+    ``weights`` is the optional per-example weight channel; ``phist`` must
+    have been accumulated from the same weighted statistics."""
     n_in = slot_map.shape[0]
     packed = jnp.where((slot >= 0) & (slot < n_in),
                        slot_map[jnp.clip(slot, 0, n_in - 1)], -1)
     h_small = histogram_ref(bins, stats, packed, num_slots=num_pairs,
-                            n_bins=n_bins)
+                            n_bins=n_bins, weights=weights)
     h_der = phist - h_small
     sl = (side != 0)[:, None, None, None]
     k = bins.shape[1]

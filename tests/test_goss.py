@@ -1,0 +1,257 @@
+"""GOSS-sampled, device-resident gradient boosting + the weighted histogram
+channel it rides on.
+
+Contracts under test (see core/histogram.py, core/forest.py):
+  * weighted histograms match the ref.py oracle on every backend;
+  * uniform weights are BIT-identical to the unweighted path, and
+    ``weights=None`` traces the exact pre-weighting computation (jaxpr
+    primitive-sequence asserted) — the existing contract cannot rot;
+  * GOSS sampling is deterministic under a fixed seed;
+  * GOSS composed with sibling subtraction matches the dense build's
+    quality on the synthetic regression task.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GossConfig, GradientBoostedTrees, TreeConfig,
+                        build_tree, class_stats, fit_bins, moment_stats,
+                        node_histogram, node_histogram_sibling_fused,
+                        node_histogram_smaller_child, predict_bins, transform)
+from repro.core.forest import _goss_sample
+from repro.core.histogram import _BACKENDS
+from repro.data import make_regression, train_val_test_split
+from repro.kernels.ref import histogram_ref, sibling_ref
+
+ALL_BACKENDS = ["segment", "onehot", "pallas"]
+
+
+def _case(rng, m, s, k, b, c, kind="moment"):
+    bins = jnp.asarray(rng.integers(0, b, size=(m, k)), jnp.int32)
+    if kind == "class":
+        stats = class_stats(jnp.asarray(rng.integers(0, c, size=m)), c)
+    else:
+        stats = moment_stats(jnp.asarray(rng.normal(size=m) * 5))
+    slot = jnp.asarray(rng.integers(-1, s, size=m), jnp.int32)
+    w = jnp.asarray(rng.uniform(0.25, 9.0, size=m).astype(np.float32))
+    return bins, stats, slot, w
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("kind", ["class", "moment"])
+def test_weighted_histogram_matches_oracle(backend, kind):
+    rng = np.random.default_rng(0)
+    m, s, k, b, c = 500, 8, 3, 11, 4
+    bins, stats, slot, w = _case(rng, m, s, k, b, c, kind)
+    h = node_histogram(bins, stats, slot, num_slots=s, n_bins=b,
+                       backend=backend, weights=w)
+    want = histogram_ref(bins, stats, slot, num_slots=s, n_bins=b, weights=w)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_uniform_weights_bit_identical(backend):
+    """weights=1 multiplies every stat row by 1.0 exactly, so the weighted
+    path must reproduce the unweighted histogram bit for bit."""
+    rng = np.random.default_rng(1)
+    m, s, k, b, c = 400, 8, 3, 9, 3
+    bins, stats, slot, _ = _case(rng, m, s, k, b, c, "class")
+    hu = node_histogram(bins, stats, slot, num_slots=s, n_bins=b,
+                        backend=backend)
+    h1 = node_histogram(bins, stats, slot, num_slots=s, n_bins=b,
+                        backend=backend, weights=jnp.ones((m,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(hu), np.asarray(h1))
+
+
+def _prim_names(jaxpr):
+    """Flat primitive-name sequence, recursing through pjit/closed calls."""
+    names = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pjit":
+            names.extend(_prim_names(eqn.params["jaxpr"].jaxpr))
+            continue
+        names.append(eqn.primitive.name)
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                if type(sub).__name__ == "ClosedJaxpr":
+                    names.extend(_prim_names(sub.jaxpr))
+    return names
+
+
+@pytest.mark.parametrize("backend", ["segment", "onehot"])
+def test_unweighted_jaxpr_is_the_pre_weighting_trace(backend):
+    """``weights=None`` must add NO ops: the public entry point's trace is
+    primitive-for-primitive the raw backend's trace, so the unweighted
+    path's bit-exactness contract (sibling subtraction!) cannot drift."""
+    rng = np.random.default_rng(2)
+    m, s, k, b, c = 64, 4, 2, 5, 3
+    bins, stats, slot, w = _case(rng, m, s, k, b, c, "class")
+    j_pub = jax.make_jaxpr(lambda bb, ss, sl: node_histogram(
+        bb, ss, sl, num_slots=s, n_bins=b, backend=backend))(bins, stats, slot)
+    j_raw = jax.make_jaxpr(lambda bb, ss, sl: _BACKENDS[backend](
+        bb, ss, sl, s, b))(bins, stats, slot)
+    assert _prim_names(j_pub.jaxpr) == _prim_names(j_raw.jaxpr)
+    # and the weighted trace differs (the weight multiply exists at all)
+    j_w = jax.make_jaxpr(lambda bb, ss, sl, ww: node_histogram(
+        bb, ss, sl, num_slots=s, n_bins=b, backend=backend,
+        weights=ww))(bins, stats, slot, w)
+    assert _prim_names(j_w.jaxpr) != _prim_names(j_pub.jaxpr)
+
+
+@pytest.mark.parametrize("kind", ["class", "moment"])
+def test_weighted_smaller_child_and_fused_parity(kind):
+    """Weighted packed scatter + weighted fused epilogue vs the segment
+    reference and the sibling_ref oracle."""
+    rng = np.random.default_rng(3)
+    m, s, k, b, c = 600, 8, 3, 9, 3
+    bins, stats, slot, w = _case(rng, m, s, k, b, c, kind)
+    compute = jnp.asarray([True, False, False, True, True, False, False,
+                           True])
+    a = node_histogram_smaller_child(bins, stats, slot, compute, num_slots=s,
+                                     n_bins=b, backend="segment", weights=w)
+    p = node_histogram_smaller_child(bins, stats, slot, compute, num_slots=s,
+                                     n_bins=b, backend="pallas", weights=w)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(a),
+                               rtol=1e-5, atol=1e-4)
+
+    h_parent = histogram_ref(bins, stats, jnp.where(slot >= 0, slot // 2, -1),
+                             num_slots=s // 2, n_bins=b, weights=w)
+    fused = node_histogram_sibling_fused(bins, stats, slot, compute, h_parent,
+                                         num_slots=s, n_bins=b,
+                                         backend="pallas", weights=w)
+    slot_map = jnp.where(compute, jnp.arange(s, dtype=jnp.int32) // 2, -1)
+    want = sibling_ref(bins, stats, slot, slot_map, h_parent, compute[0::2],
+                       num_pairs=s // 2, n_bins=b, weights=w)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_uniform_weight_build_tree_bit_identical():
+    """A sample_weight of all ones must build the exact unweighted tree
+    (multiply-by-1.0 is exact, and the regression_variance task keeps its
+    subtraction eligibility under weights)."""
+    cols, y = make_regression(1200, 5, seed=1)
+    table = fit_bins(cols, max_num_bins=32)
+    cfg = TreeConfig(max_depth=6, task="regression_variance")
+    t0 = build_tree(table, y, cfg)
+    t1 = build_tree(table, y, cfg,
+                    sample_weight=np.ones(len(y), np.float32))
+    assert t0.n_nodes == t1.n_nodes
+    for f in ("feat", "op", "tbin", "label", "count", "left", "right",
+              "leaf"):
+        np.testing.assert_array_equal(np.asarray(getattr(t0, f)),
+                                      np.asarray(getattr(t1, f)), err_msg=f)
+
+
+def test_weighted_subtraction_matches_dense_weighted_build():
+    """Weighted build with sibling subtraction vs full recompute: the
+    documented float-tolerance contract (structure may flip on fp ties, but
+    fitted values agree)."""
+    cols, y = make_regression(1500, 6, seed=2)
+    table = fit_bins(cols, max_num_bins=32)
+    rng = np.random.default_rng(0)
+    w = np.where(rng.uniform(size=len(y)) < 0.25, 1.0, 2.0).astype(np.float32)
+    cfg = dict(max_depth=6, task="regression_variance")
+    on = build_tree(table, y, TreeConfig(**cfg), sample_weight=w)
+    off = build_tree(table, y,
+                     TreeConfig(**cfg, sibling_subtraction=False),
+                     sample_weight=w)
+    pa = np.asarray(predict_bins(on, table.bins, table.n_num))
+    pb = np.asarray(predict_bins(off, table.bins, table.n_num))
+    np.testing.assert_allclose(pa, pb, rtol=1e-4, atol=1e-4)
+
+
+def test_goss_sample_device_semantics():
+    """top_n largest-|gradient| indices at weight 1, other_n uniform from
+    the remainder at weight (1-a)/b, no index drawn twice."""
+    rng = np.random.default_rng(4)
+    grad = jnp.asarray(rng.normal(size=1000).astype(np.float32))
+    cfg = GossConfig(top_rate=0.1, other_rate=0.2)
+    top_n, other_n = cfg.sample_sizes(1000)
+    assert (top_n, other_n) == (100, 200)
+    idx, w = _goss_sample(grad, jax.random.PRNGKey(0), top_n=top_n,
+                          other_n=other_n, amp=cfg.amplification)
+    idx = np.asarray(idx)
+    assert len(np.unique(idx)) == top_n + other_n
+    absg = np.abs(np.asarray(grad))
+    thresh = np.sort(absg)[-top_n]
+    assert (absg[idx[:top_n]] >= thresh).all()
+    np.testing.assert_array_equal(np.asarray(w[:top_n]), 1.0)
+    np.testing.assert_allclose(np.asarray(w[top_n:]), (1 - 0.1) / 0.2)
+
+
+def test_goss_sample_empty_remainder():
+    """ceil rounding at tiny M can make the top set cover every row; the
+    remainder draw must then be EMPTY, never a duplicate of a top index."""
+    cfg = GossConfig(top_rate=0.9, other_rate=0.1)   # fp-robust validation
+    top_n, other_n = cfg.sample_sizes(5)
+    assert (top_n, other_n) == (5, 0)
+    grad = jnp.asarray(np.arange(5, dtype=np.float32))
+    idx, w = _goss_sample(grad, jax.random.PRNGKey(1), top_n=top_n,
+                          other_n=other_n, amp=cfg.amplification)
+    assert sorted(np.asarray(idx).tolist()) == [0, 1, 2, 3, 4]
+    np.testing.assert_array_equal(np.asarray(w), 1.0)
+
+
+def test_goss_config_validation():
+    with pytest.raises(ValueError):
+        GossConfig(top_rate=1.0)
+    with pytest.raises(ValueError):
+        GossConfig(top_rate=0.5, other_rate=0.6)
+    with pytest.raises(ValueError):
+        GossConfig(other_rate=0.0)
+
+
+def test_goss_deterministic_under_fixed_seed():
+    cols, y = make_regression(2000, 5, seed=5)
+    (tr_c, tr_y), _, (te_c, te_y) = train_val_test_split(cols, y)
+    table = fit_bins(tr_c, max_num_bins=32)
+    mk = lambda: GradientBoostedTrees(
+        n_trees=4, seed=11, goss=GossConfig(0.1, 0.1),
+        config=TreeConfig(max_depth=5, task="regression_variance"))
+    a = mk().fit(table, tr_y)
+    b = mk().fit(table, tr_y)
+    tb = transform(te_c, table)
+    np.testing.assert_array_equal(a.predict(tb), b.predict(tb))
+    for f in ("feat", "tbin", "left", "right"):
+        np.testing.assert_array_equal(np.asarray(getattr(a.trees[0], f)),
+                                      np.asarray(getattr(b.trees[0], f)))
+
+
+def test_goss_with_subtraction_close_to_dense_build():
+    """The headline quality contract: GOSS (composed with sibling
+    subtraction, the default) must stay close to the unsampled GBT on the
+    synthetic regression task while far beating the mean predictor."""
+    cols, y = make_regression(4000, 6, seed=7)
+    (tr_c, tr_y), _, (te_c, te_y) = train_val_test_split(cols, y)
+    table = fit_bins(tr_c, max_num_bins=32)
+    tb = transform(te_c, table)
+    full = GradientBoostedTrees(n_trees=8).fit(table, tr_y)
+    goss = GradientBoostedTrees(n_trees=8,
+                                goss=GossConfig(0.1, 0.1)).fit(table, tr_y)
+    rmse = lambda p: float(np.sqrt(((p - te_y) ** 2).mean()))
+    r_full, r_goss = rmse(full.predict(tb)), rmse(goss.predict(tb))
+    r_base = rmse(np.full_like(te_y, np.asarray(tr_y).mean()))
+    assert r_goss < 0.8 * r_base            # sampling still actually learns
+    assert r_goss <= r_full * 1.35          # and stays near the dense build
+    # composition really sampled: every GOSS tree trained on (a+b)M rows
+    m_sub = int(np.ceil(0.1 * len(tr_y))) + int(np.ceil(0.1 * len(tr_y)))
+    assert int(goss.trees[0].count[0]) != m_sub   # counts are amplified ...
+    assert abs(int(goss.trees[0].count[0]) - len(tr_y)) <= m_sub  # ... to ~M
+
+
+def test_goss_subtraction_on_off_predictions_agree():
+    """GOSS rides the weighted float-tolerance contract: sampling with and
+    without sibling subtraction fits the same ensemble values."""
+    cols, y = make_regression(2000, 5, seed=9)
+    (tr_c, tr_y), _, _ = train_val_test_split(cols, y)
+    table = fit_bins(tr_c, max_num_bins=32)
+    mk = lambda sub: GradientBoostedTrees(
+        n_trees=4, seed=3, goss=GossConfig(0.2, 0.2),
+        config=TreeConfig(max_depth=5, task="regression_variance",
+                          sibling_subtraction=sub))
+    pa = mk(True).fit(table, tr_y).predict(table.bins)
+    pb = mk(False).fit(table, tr_y).predict(table.bins)
+    np.testing.assert_allclose(pa, pb, rtol=1e-3, atol=1e-3)
