@@ -1,0 +1,185 @@
+"""Newton-step logistic boosting benchmark: classification quality and
+histogram scatter work for the logistic-loss GradientBoostedTrees, full vs
+GOSS-sampled (hessian weights, GOSS amplification, and sibling subtraction
+all composed on the one weight channel).
+
+    PYTHONPATH=src python -m benchmarks.bench_logistic [--smoke | --gate]
+
+Quality is validation AUC and accuracy on a held-out split of the synthetic
+binary task, reported against the base-rate predictor (AUC 0.5, accuracy =
+majority fraction): a Newton-step ensemble that fails to clear the base
+rate by a wide margin is broken regardless of how fast it runs.  Scatter
+work is counted exactly as bench_goss does — the example rows each level's
+histogram pass actually accumulates, from the builder's own per-level
+BuildState — so the GOSS-vs-full ratio measures the composed sampling +
+subtraction reduction on the NEW workload.
+
+Writes BENCH_logistic.json for the cross-PR perf trajectory (uploaded by
+the bench-smoke job).  ``--gate`` is the blocking CI mode: it loads the
+committed BENCH_logistic.json as the baseline, re-runs the smoke shapes
+into a throwaway path (no self-ratcheting, same rule as bench_subtraction
+and bench_goss), and exits nonzero when the GOSS ensemble's AUC/accuracy
+drop below the absolute floors vs the base-rate predictor, the scatter-work
+ratio drops below the 2x floor, or the ratio falls materially below the
+committed baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from benchmarks.bench_goss import _fit_counting
+from repro.core import (GossConfig, GradientBoostedTrees, TreeConfig,
+                        fit_bins, transform)
+from repro.data import make_classification, train_val_test_split
+
+# the one definition of the CI smoke-gate shapes (benchmarks/run.py --smoke
+# and the --gate mode both use it, so artifacts stay comparable)
+SMOKE = dict(m=6_000, k=6, n_trees=12, max_depth=5, n_bins=32,
+             top_rate=0.1, other_rate=0.1, seed=0)
+
+MIN_RATIO = 2.0      # absolute scatter-work floor (as the goss-gate)
+AUC_FLOOR = 0.70     # GOSS AUC floor; the base-rate predictor scores 0.5
+                     # (measured 0.76 at smoke shapes; the slack absorbs
+                     # jax version bumps, the baseline rule catches drift)
+ACC_MARGIN = 0.05    # goss_acc >= base-rate accuracy + ACC_MARGIN
+BASELINE_SLACK = 0.95  # tolerated fraction of the committed baseline ratio
+
+
+def auc(y, score):
+    """Rank-based AUC with average ranks on ties (host-side, O(M log M))."""
+    y = np.asarray(y).astype(int)
+    score = np.asarray(score, dtype=np.float64)
+    order = np.argsort(score, kind="mergesort")
+    ranks = np.empty(len(score), dtype=np.float64)
+    sorted_s = score[order]
+    i = 0
+    while i < len(score):
+        j = i
+        while j + 1 < len(score) and sorted_s[j + 1] == sorted_s[i]:
+            j += 1
+        ranks[order[i:j + 1]] = (i + j) / 2.0 + 1.0
+        i = j + 1
+    n1 = y.sum()
+    n0 = len(y) - n1
+    if n1 == 0 or n0 == 0:
+        return 0.5
+    return float((ranks[y == 1].sum() - n1 * (n1 + 1) / 2.0) / (n1 * n0))
+
+
+def run(m=20_000, k=10, n_trees=20, max_depth=6, n_bins=64, top_rate=0.1,
+        other_rate=0.1, seed=0, out="BENCH_logistic.json"):
+    cols, y = make_classification(m, k, 2, seed=seed, teacher_depth=6,
+                                  noise=0.1)
+    (tr_c, tr_y), (va_c, va_y), _ = train_val_test_split(cols, y, seed=seed)
+    table = fit_bins(tr_c, max_num_bins=n_bins)
+    vb = transform(va_c, table)
+    tr_y = tr_y.astype(np.float32)
+    cfg = TreeConfig(max_depth=max_depth, task="regression_variance")
+    acc = lambda p: float(((np.asarray(p) > 0.5).astype(int) == va_y).mean())
+
+    full = GradientBoostedTrees(n_trees=n_trees, config=cfg, seed=seed,
+                                loss="logistic")
+    full_rows, full_s = _fit_counting(full, table, tr_y)
+    p_full = full.predict(vb)
+
+    goss = GradientBoostedTrees(
+        n_trees=n_trees, config=cfg, seed=seed, loss="logistic",
+        goss=GossConfig(top_rate=top_rate, other_rate=other_rate))
+    goss_rows, goss_s = _fit_counting(goss, table, tr_y)
+    p_goss = goss.predict(vb)
+
+    acc_base = float(max((va_y == 0).mean(), (va_y == 1).mean()))
+    tot_full, tot_goss = sum(full_rows), sum(goss_rows)
+    report = dict(
+        config=dict(m=m, k=k, n_trees=n_trees, max_depth=max_depth,
+                    n_bins=n_bins, top_rate=top_rate, other_rate=other_rate,
+                    seed=seed),
+        total_full_rows=tot_full, total_goss_rows=tot_goss,
+        scatter_work_ratio=round(tot_full / max(tot_goss, 1), 3),
+        auc_full=round(auc(va_y, p_full), 4),
+        auc_goss=round(auc(va_y, p_goss), 4),
+        acc_full=round(acc(p_full), 4), acc_goss=round(acc(p_goss), 4),
+        acc_base=round(acc_base, 4),
+        wall_full_s=round(full_s, 2), wall_goss_s=round(goss_s, 2),
+    )
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print("logistic,metric,full,goss")
+    print(f"logistic,scatter_rows,{tot_full},{tot_goss}")
+    print(f"logistic,auc,{report['auc_full']},{report['auc_goss']}")
+    print(f"logistic,acc,{report['acc_full']},{report['acc_goss']}")
+    print(f"logistic_total,scatter {tot_full} -> {tot_goss} "
+          f"({report['scatter_work_ratio']}x less), auc "
+          f"{report['auc_full']} / {report['auc_goss']}, acc "
+          f"{report['acc_full']} / {report['acc_goss']} (base-rate "
+          f"{report['acc_base']}), wall {report['wall_full_s']}s -> "
+          f"{report['wall_goss_s']}s, -> {out}")
+    return report
+
+
+def gate(baseline_path="BENCH_logistic.json"):
+    """Blocking CI gate: smoke run vs the committed baseline.
+
+    Blocks on the quality floors — the GOSS logistic ensemble's AUC
+    (>= AUC_FLOOR, where the base-rate predictor scores 0.5) and accuracy
+    (>= base-rate accuracy + ACC_MARGIN) — and the composed scatter-work
+    ratio (>= the 2x floor and >= BASELINE_SLACK of the committed
+    baseline).  Writes its own report to a throwaway path so a regressed
+    run can never ratchet the committed baseline down (the
+    bench_subtraction no-self-ratchet rule)."""
+    baseline = None
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    report = run(**SMOKE, out=os.path.join(
+        tempfile.gettempdir(), "BENCH_logistic_gate.json"))
+    ratio = report["scatter_work_ratio"]
+    ok = ratio >= MIN_RATIO
+    lines = [f"logistic-gate: smoke scatter-work ratio {ratio}x "
+             f"(floor {MIN_RATIO}x) -> {'OK' if ok else 'FAIL'}"]
+    auc_ok = report["auc_goss"] >= AUC_FLOOR
+    ok = ok and auc_ok
+    lines.append(f"logistic-gate: goss auc {report['auc_goss']} (full "
+                 f"{report['auc_full']}, base-rate 0.5, require >= "
+                 f"{AUC_FLOOR}) -> {'OK' if auc_ok else 'FAIL'}")
+    want_acc = round(report["acc_base"] + ACC_MARGIN, 4)
+    acc_ok = report["acc_goss"] >= want_acc
+    ok = ok and acc_ok
+    lines.append(f"logistic-gate: goss acc {report['acc_goss']} (full "
+                 f"{report['acc_full']}, base-rate {report['acc_base']}, "
+                 f"require >= {want_acc}) -> {'OK' if acc_ok else 'FAIL'}")
+    if baseline is None:
+        lines.append(f"logistic-gate: no baseline at {baseline_path} "
+                     "(floor checks only)")
+    elif baseline.get("config") != report["config"]:
+        lines.append("logistic-gate: baseline config differs "
+                     "(floor checks only)")
+    else:
+        want = BASELINE_SLACK * baseline["scatter_work_ratio"]
+        rel_ok = ratio >= want
+        ok = ok and rel_ok
+        lines.append(f"logistic-gate: baseline ratio "
+                     f"{baseline['scatter_work_ratio']}x, require >= "
+                     f"{round(want, 3)}x -> {'OK' if rel_ok else 'FAIL'}")
+    print("\n".join(lines))
+    return 0 if ok else 1
+
+
+def main():
+    if "--gate" in sys.argv:
+        sys.exit(gate())
+    if "--smoke" in sys.argv:
+        return run(**SMOKE)
+    return run()
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import bench_selection, bench_udt_cls, bench_udt_reg
-from benchmarks import bench_goss, bench_kernels, bench_subtraction
+from benchmarks import (bench_goss, bench_kernels, bench_logistic,
+                        bench_subtraction)
 
 
 def main() -> None:
@@ -63,6 +64,14 @@ def main() -> None:
         bench_goss.run()
     else:   # reduced-scale default
         bench_goss.run(m=8_000, k=8, n_trees=10, max_depth=6)
+
+    print("# Newton-step logistic boosting (writes BENCH_logistic.json)")
+    if smoke:
+        bench_logistic.run(**bench_logistic.SMOKE)
+    elif full:
+        bench_logistic.run()
+    else:   # reduced-scale default
+        bench_logistic.run(m=8_000, k=8, n_trees=10, max_depth=6)
 
     if not smoke:
         print("# kernel micro-bench")

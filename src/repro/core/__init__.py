@@ -24,3 +24,6 @@ from repro.core.tuning import tune, toot_grid, prune_stats, TuneResult  # noqa: 
 from repro.core.forest import (  # noqa: F401
     GossConfig, GradientBoostedTrees, RandomForest,
 )
+from repro.core.losses import (  # noqa: F401
+    LogisticLoss, SquaredLoss, get_loss,
+)

@@ -7,24 +7,40 @@ drop out of the same machinery:
   * RandomForest: bootstrap rows + feature subsampling per tree.  Feature
     subsampling reuses the padded-feature mechanism (excluded features get
     n_num = n_cat = 0 and are never selectable) so ALL trees share one
-    binned table and one compiled step.
-  * GradientBoostedTrees: regression trees on residuals (variance mode),
-    i.e. the XGBoost-hist structure with the paper's selection inside.
+    binned table and one compiled step.  Prediction stacks every tree's
+    WALK_FIELDS and votes in ONE vmapped device walk (a single host
+    transfer for the whole forest) — only the per-tree ``n_num`` vectors
+    are retained after fit, never the bootstrapped bins.
+  * GradientBoostedTrees: Newton-step boosting (the XGBoost-hist
+    structure with the paper's selection inside), generic in the loss via
+    core.losses.  Each round fits a ``regression_variance`` tree to the
+    Newton target ``z = -g/h`` with ``sample_weight = h``: the in-kernel
+    weight channel makes every leaf label ``-sum(g)/sum(h)`` — an exact
+    Newton step — and the variance split score ``(sum g)^2 / sum h`` —
+    the XGBoost gain — with no new kernel code (see core/losses.py for
+    the equivalence).  ``loss="squared"`` has h = 1 and reduces to the
+    original residual-fitting path bit for bit; ``loss="logistic"``
+    opens binary classification with sigmoid-linked probabilities.
 
 Both ensembles go through ``build_tree`` unchanged, so they inherit the
 sibling-subtraction fast path (TreeConfig.sibling_subtraction, on by
 default): per-tree histogram scatter work drops >= 2x per level, which
-multiplies across the whole ensemble.
+multiplies across the whole ensemble.  Hessian weights ride the same
+float-tolerance subtraction contract as GOSS weights (``regression_
+variance`` stays eligible; see core.tree._subtract_eligible), so Newton
+boosting, GOSS, and subtraction all compose.
 
 ``GradientBoostedTrees`` additionally supports GOSS (Gradient-based
 One-Side Sampling, cf. LightGBM and the random-sampling split finding of
 arXiv:2108.08790) via ``GossConfig``: each tree trains on the top-``a``
-fraction of examples by |gradient| plus a ``b`` fraction sampled from the
+fraction of examples by Newton leverage ``|g|*sqrt(h)`` (plain |gradient|
+when the hessian is constant) plus a ``b`` fraction sampled from the
 remainder, the latter weighted by ``(1-a)/b`` so weighted statistics stay
-unbiased — see GossConfig for the math.  The boosting loop is
-device-resident: residuals, predictions, gradient ranking, and sampling
-stay jax Arrays across trees, and ensemble prediction batches every tree's
-walk on device with a single host transfer at the end.
+unbiased — see GossConfig for the math; the GOSS weight multiplies the
+hessian weight on the sampled rows.  The boosting loop is device-resident:
+raw scores, gradients/hessians, the ranking, the sampling, and the link
+function all stay jax Arrays across trees, and ensemble prediction batches
+every tree's walk on device with a single host transfer at the end.
 """
 from __future__ import annotations
 
@@ -37,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.binning import BinnedTable
+from repro.core.losses import get_loss
 from repro.core.predict import WALK_FIELDS, _walk, predict_bins
 from repro.core.tree import Tree, TreeConfig, build_tree
 
@@ -50,6 +67,24 @@ def _subsample_table(table: BinnedTable, feat_mask: np.ndarray) -> BinnedTable:
         n_num=np.where(feat_mask, table.n_num, 0).astype(np.int32),
         n_cat=np.where(feat_mask, table.n_cat, 0).astype(np.int32),
         metas=table.metas, n_bins=table.n_bins)
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps", "n_classes"))
+def _forest_vote(stacked, n_nums, bins, *, num_steps, n_classes):
+    """Batched Algorithm-7 walk + majority vote for the whole forest: one
+    vmap over the stacked [T, max_nodes] tree arrays AND the per-tree
+    feature masks (n_num differs per tree under feature subsampling), one
+    [M, C] one-hot vote reduction, one argmax — callers transfer the [M]
+    class vector once.  Integer vote counts are exact in f32 and argmax
+    takes the first maximum, so this reproduces the per-tree host loop bit
+    for bit."""
+    no_limit = jnp.int32(1 << 30)
+    per_tree = jax.vmap(
+        lambda ta, nn: _walk(ta, bins, nn, no_limit, jnp.int32(0),
+                             num_steps=num_steps))(stacked, n_nums)  # [T, M]
+    votes = jax.nn.one_hot(per_tree.astype(jnp.int32), n_classes,
+                           dtype=jnp.float32).sum(axis=0)           # [M, C]
+    return jnp.argmax(votes, axis=1).astype(jnp.int32)
 
 
 @dataclasses.dataclass
@@ -66,7 +101,10 @@ class RandomForest:
         m, k = table.bins.shape
         self.n_classes = n_classes
         self.trees: list[Tree] = []
-        self.tables: list[BinnedTable] = []
+        # predict only needs each tree's feature mask (n_num); retaining the
+        # bootstrapped [M, K] bins per tree was an M*K*T memory leak.
+        self.n_nums: list[np.ndarray] = []
+        self._stacked = None            # predict's lazy stacked-walk cache
         y = np.asarray(y)
         for _ in range(self.n_trees):
             fm = rng.uniform(size=k) < self.max_features
@@ -83,15 +121,27 @@ class RandomForest:
                 yy = y
             self.trees.append(build_tree(sub, yy, self.config,
                                          n_classes=n_classes))
-            self.tables.append(sub)
+            self.n_nums.append(sub.n_num)
         return self
 
+    def predict_device(self, bins) -> jax.Array:
+        """Majority-vote class ids as a device Array (no host transfer).
+        The stacked [T, max_nodes] tree arrays and [T, K] feature masks are
+        built once on first use (trees are immutable after fit)."""
+        if getattr(self, "_stacked", None) is None:
+            self._stacked = (
+                {f: jnp.stack([getattr(t, f) for t in self.trees])
+                 for f in WALK_FIELDS},
+                jnp.stack([jnp.asarray(nn) for nn in self.n_nums]),
+                max(1, max(t.max_tree_depth for t in self.trees)))
+        stacked, n_nums, steps = self._stacked
+        return _forest_vote(stacked, n_nums, jnp.asarray(bins),
+                            num_steps=steps, n_classes=self.n_classes)
+
     def predict(self, bins):
-        votes = np.zeros((bins.shape[0], self.n_classes))
-        for tree, tab in zip(self.trees, self.tables):
-            p = np.asarray(predict_bins(tree, bins, tab.n_num)).astype(int)
-            votes[np.arange(len(p)), p] += 1
-        return votes.argmax(axis=1)
+        """Batched forest prediction; ONE device->host transfer for the
+        whole forest (the per-tree transfer loop was the old hot spot)."""
+        return np.asarray(self.predict_device(bins))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +162,17 @@ class GossConfig:
     enters the histogram scatter itself (``build_tree(sample_weight=...)``
     -> the in-kernel weight channel of kernels/histogram.py), so the
     amplification is exact, not a post-selection rescale.
+
+    Under a non-constant hessian (Newton boosting, core.losses) the ranking
+    statistic is ``|g| * sqrt(h)``: the gradient magnitude damped by the
+    square root of the local curvature, so near-saturated examples (h -> 0,
+    where the Newton working response g/h explodes but carries almost no
+    weight in the fitted leaves) do not crowd the kept set the way raw |g|
+    — let alone the outlier-chasing |g|/sqrt(h) — would let them.  The
+    GOSS weight multiplies the hessian weight on the sampled rows, so the
+    weighted moments stay unbiased estimates of the full-data ``sum h`` /
+    ``sum h z`` channels whatever the ranking.  For constant-hessian losses
+    the statistic reduces to |g|, LightGBM's original GOSS ranking.
 
     Composition with sibling subtraction: a weighted build's histogram
     channels are float weighted sums, which keeps subtraction eligible only
@@ -152,10 +213,12 @@ class GossConfig:
 def _goss_sample(grad, key, *, top_n, other_n, amp):
     """Device-side GOSS draw: indices [top_n + other_n] and their weights.
 
-    The top-|gradient| set comes from one ``top_k``; the uniform remainder
-    re-uses ``top_k`` over random keys with the top set masked out (an
-    O(M log M)-free approximation of choice-without-replacement that stays
-    fully on device and is deterministic under a fixed PRNG key).
+    ``grad`` is the ranking statistic (the raw gradient, or the Newton
+    leverage ``g * sqrt(h)`` — only |grad| matters).  The top-|gradient|
+    set comes from one ``top_k``; the uniform remainder re-uses ``top_k``
+    over random keys with the top set masked out (an O(M log M)-free
+    approximation of choice-without-replacement that stays fully on device
+    and is deterministic under a fixed PRNG key).
     """
     scores = jax.random.uniform(key, grad.shape)
     if top_n:
@@ -189,15 +252,27 @@ def _ensemble_predict(stacked, bins, n_num, lr, base, *, num_steps):
 
 @dataclasses.dataclass
 class GradientBoostedTrees:
-    """Gradient boosting on squared loss with variance-split UDTs.
+    """Newton-step gradient boosting with variance-split UDTs.
 
-    The fit loop is device-resident: predictions, residuals (= negative
-    gradients), the GOSS |gradient| ranking and the sample draw all stay
-    jax Arrays from tree to tree — the only per-tree host traffic is the
-    builder's level-loop scalars.  With ``goss`` set, each tree trains on
-    the GOSS subset with the exact ``(1-a)/b`` weight channel (see
-    GossConfig); tree shapes are static across rounds, so the whole
-    ensemble reuses one compiled build + one compiled predict step.
+    ``loss`` selects the objective (core.losses: "squared" regression,
+    "logistic" binary classification, or a loss instance).  Every round
+    fits a ``regression_variance`` tree to the Newton target ``z = -g/h``
+    with ``sample_weight = h`` — leaf labels are exact Newton steps
+    ``-sum(g)/sum(h)`` via the weight channel, and
+    ``config.min_child_weight`` bounds the per-child hessian sum (the
+    XGBoost parameter of the same name).  Constant-hessian losses skip the
+    weight channel when unsampled, so ``loss="squared"`` reproduces the
+    pre-Newton residual-fitting path exactly.
+
+    The fit loop is device-resident: raw scores, gradients/hessians, the
+    GOSS leverage ranking and the sample draw all stay jax Arrays from
+    tree to tree — the only per-tree host traffic is the builder's
+    level-loop scalars.  With ``goss`` set, each tree trains on the GOSS
+    subset with the exact ``(1-a)/b`` weight channel multiplied onto the
+    hessian weights (see GossConfig); tree shapes are static across
+    rounds, so the whole ensemble reuses one compiled build + one compiled
+    predict step.  ``predict`` / ``predict_device`` apply the loss's link
+    on device: probabilities for "logistic", raw values for "squared".
     """
     n_trees: int = 20
     learning_rate: float = 0.3
@@ -205,59 +280,70 @@ class GradientBoostedTrees:
         default_factory=lambda: TreeConfig(max_depth=6,
                                            task="regression_variance"))
     goss: GossConfig | None = None
+    loss: str = "squared"
     seed: int = 0
 
     def fit(self, table: BinnedTable, y, level_callback=None):
+        lo = self._loss = get_loss(self.loss)
         bins = jnp.asarray(table.bins)
         m = bins.shape[0]
         y = jnp.asarray(y, dtype=jnp.float32)
-        base = jnp.mean(y)
+        base = lo.base_score(y)
         self.n_num = np.asarray(table.n_num)
         n_num_d = jnp.asarray(self.n_num)
         dev_table = dataclasses.replace(table, bins=bins)
-        pred = jnp.broadcast_to(base, y.shape)
+        raw = jnp.broadcast_to(base, y.shape)   # additive scores, pre-link
         key = jax.random.PRNGKey(self.seed)
         if self.goss is not None:
             top_n, other_n = self.goss.sample_sizes(m)
             amp = self.goss.amplification
         self.trees: list[Tree] = []
         self._stacked = None                    # predict_device's lazy cache
+        num_steps = max(1, self.config.max_depth)
         for _ in range(self.n_trees):
-            resid = y - pred                    # -gradient of squared loss
+            g, h = lo.grad_hess(y, raw)
+            z = lo.newton_target(g, h)
             if self.goss is None:
-                tree = build_tree(dev_table, resid, self.config,
-                                  level_callback=level_callback)
+                tree = build_tree(
+                    dev_table, z, self.config,
+                    sample_weight=None if lo.constant_hessian else h,
+                    level_callback=level_callback)
             else:
                 key, sub = jax.random.split(key)
-                idx, w = _goss_sample(resid, sub, top_n=top_n,
+                rank = g if lo.constant_hessian else g * jnp.sqrt(h)
+                idx, w = _goss_sample(rank, sub, top_n=top_n,
                                       other_n=other_n, amp=amp)
+                if not lo.constant_hessian:
+                    w = w * jnp.take(h, idx)    # GOSS amp x hessian weight
                 sub_table = dataclasses.replace(
                     table, bins=jnp.take(bins, idx, axis=0))
-                tree = build_tree(sub_table, jnp.take(resid, idx),
+                tree = build_tree(sub_table, jnp.take(z, idx),
                                   self.config, sample_weight=w,
                                   level_callback=level_callback)
             self.trees.append(tree)
-            # full-data predictions update on device; num_steps is the
+            # full-data raw scores update on device; num_steps is the
             # static depth bound so no per-tree host sync happens here
-            pred = pred + self.learning_rate * predict_bins(
-                tree, bins, n_num_d, num_steps=self.config.max_depth)
+            raw = raw + self.learning_rate * predict_bins(
+                tree, bins, n_num_d, num_steps=num_steps)
         self.base = float(base)                 # one scalar sync at the end
         return self
 
     def predict_device(self, bins) -> jax.Array:
-        """Ensemble prediction as a device Array (no host transfer).  The
-        stacked [T, max_nodes] tree arrays are built once on first use
-        (trees are immutable after fit), so a serving loop pays only the
-        jitted walk per batch."""
+        """Link-applied ensemble prediction as a device Array (no host
+        transfer).  The stacked [T, max_nodes] tree arrays are built once
+        on first use (trees are immutable after fit), so a serving loop
+        pays only the jitted walk + link per batch."""
         if getattr(self, "_stacked", None) is None:
             self._stacked = {f: jnp.stack([getattr(t, f) for t in self.trees])
                              for f in WALK_FIELDS}
-        return _ensemble_predict(
+        raw = _ensemble_predict(
             self._stacked, jnp.asarray(bins), jnp.asarray(self.n_num),
             jnp.float32(self.learning_rate), jnp.float32(self.base),
             num_steps=max(1, self.config.max_depth))
+        return getattr(self, "_loss", get_loss(self.loss)).link(raw)
 
     def predict(self, bins):
         """Batched ensemble prediction; ONE device->host transfer for the
-        whole forest (the per-tree transfer loop was the old hot spot)."""
+        whole forest (the per-tree transfer loop was the old hot spot).
+        Returns link-applied values: P(y=1) for the logistic loss."""
         return np.asarray(self.predict_device(bins))

@@ -1,0 +1,116 @@
+"""Boosting losses: first/second-order pieces for Newton-step GBT.
+
+The boosted-ensemble loop (core.forest.GradientBoostedTrees) is generic in
+the loss through four pieces, all device-side jnp functions of jax Arrays:
+
+  * ``base_score(y)``  -- the constant raw score F0 minimising the loss
+    (mean for squared error, the base-rate log-odds for logistic),
+  * ``grad_hess(y, raw)`` -- per-example gradient g_i and hessian h_i of
+    the loss at the current raw scores,
+  * ``newton_target(g, h)`` -- the working response ``z = -g/h`` each round's
+    regression tree is fit to,
+  * ``link(raw)`` -- raw ensemble score -> user-facing prediction
+    (identity / sigmoid), applied ON DEVICE by ``predict_device``.
+
+Newton-on-the-weight-channel equivalence
+----------------------------------------
+Each boosting round trains a ``regression_variance`` UDT on the target
+``z = -g/h`` with ``sample_weight = h``.  The weight channel (PR 3's
+in-kernel GOSS machinery, see kernels/histogram.py) then accumulates the
+hessian-weighted moments ``(sum h, sum h*z, sum h*z^2)`` per (node, feature,
+bin), so WITHOUT ANY NEW KERNEL CODE:
+
+  * every leaf label is ``sum(h*z)/sum(h) = -sum(g)/sum(h)`` — an exact
+    Newton step (XGBoost's leaf weight at lambda = 0),
+  * the variance split score ``(sum h*z)^2 / sum h`` (heuristics.sse_gain)
+    is ``(sum g)^2 / sum h`` — exactly the XGBoost-hist split gain,
+  * ``TreeConfig.min_child_weight`` bounds ``sum h`` per child, acquiring
+    its real hessian-sum semantics (the XGBoost parameter of the same
+    name).
+
+Since the hessian rides the same weight channel as GOSS's ``(1-a)/b``
+amplification (the two multiply), Newton boosting composes with GOSS
+sampling and with sibling subtraction exactly as the weighted
+regression path does: ``regression_variance`` keeps subtraction under the
+float-tolerance contract of core.tree._subtract_eligible.  Losses with
+``constant_hessian`` (squared error, h = 1) skip the weight channel
+entirely when unsampled, so the pre-existing squared-loss path traces —
+and fits — bit-identically to before the refactor.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SquaredLoss", "LogisticLoss", "LOSSES", "get_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SquaredLoss:
+    """L = 1/2 (raw - y)^2:  g = raw - y,  h = 1, identity link.
+
+    ``constant_hessian`` lets the boosting loop drop the weight channel
+    (sample_weight=None) for unsampled fits, keeping the original
+    squared-loss trace — and its sibling-subtraction contract — untouched.
+    """
+    name = "squared"
+    constant_hessian = True
+
+    def base_score(self, y: jax.Array) -> jax.Array:
+        return jnp.mean(y)
+
+    def grad_hess(self, y: jax.Array, raw: jax.Array):
+        return raw - y, jnp.ones_like(raw)
+
+    def newton_target(self, g: jax.Array, h: jax.Array) -> jax.Array:
+        # -g/h with h identically 1; skipping the divide keeps the target
+        # bit-identical to the pre-refactor residual (y - raw).
+        return -g
+
+    def link(self, raw: jax.Array) -> jax.Array:
+        return raw
+
+
+@dataclasses.dataclass(frozen=True)
+class LogisticLoss:
+    """Binary cross-entropy on raw log-odds scores, y in {0, 1}.
+
+    With p = sigmoid(raw):  g = p - y,  h = p (1 - p), sigmoid link.
+    ``eps`` floors the hessian so the Newton target ``z = -g/h`` stays
+    finite when p saturates (XGBoost applies the same floor); the floored
+    hessian also enters the weight channel, so leaves remain exact Newton
+    steps -sum(g)/sum(h_floored) of the statistics actually accumulated.
+    """
+    eps: float = 1e-6
+    name = "logistic"
+    constant_hessian = False
+
+    def base_score(self, y: jax.Array) -> jax.Array:
+        p = jnp.clip(jnp.mean(y), self.eps, 1.0 - self.eps)
+        return jnp.log(p) - jnp.log1p(-p)
+
+    def grad_hess(self, y: jax.Array, raw: jax.Array):
+        p = jax.nn.sigmoid(raw)
+        return p - y, jnp.maximum(p * (1.0 - p), self.eps)
+
+    def newton_target(self, g: jax.Array, h: jax.Array) -> jax.Array:
+        return -g / h
+
+    def link(self, raw: jax.Array) -> jax.Array:
+        return jax.nn.sigmoid(raw)
+
+
+LOSSES = {"squared": SquaredLoss, "logistic": LogisticLoss}
+
+
+def get_loss(loss):
+    """Resolve a loss name or pass a loss instance through."""
+    if isinstance(loss, str):
+        try:
+            return LOSSES[loss]()
+        except KeyError:
+            raise ValueError(
+                f"unknown loss {loss!r}; have {list(LOSSES)}") from None
+    return loss

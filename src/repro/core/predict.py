@@ -5,6 +5,12 @@ arguments: a full-grown tree answers queries *as if* it had been trained with
 those hyper-parameters (it returns the current node's label as soon as the
 walk hits a leaf, a node with fewer than ``min_split`` examples, or the depth
 limit).  This is what makes Training-Only-Once Tuning possible.
+
+Weighted builds (GOSS sampling, Newton boosting's hessian weights): the
+``count`` field the walk compares against ``min_split`` then holds the
+round-to-nearest int of the node's WEIGHT sum — the estimated full-data
+count under GOSS, the hessian sum under Newton boosting — so a runtime
+``min_samples_split`` prunes on the same weighted scale the builder used.
 """
 from __future__ import annotations
 

@@ -89,6 +89,13 @@ def best_splits(hist: jax.Array, n_num: jax.Array, n_cat: jax.Array, *,
     semantics), and ``min_child_weight`` adds a strict floor on the same
     weighted scale — useful to keep a handful of amplified small-gradient
     examples from supporting a split on their own.
+
+    Newton boosting (core.losses) rides the identical mechanism with
+    hessians as the weights: the moment channels become ``(sum h,
+    sum h*z, sum h*z^2)`` with ``z = -g/h``, so the "sse" score
+    ``(sum h*z)^2 / sum h`` of a side IS the XGBoost split gain
+    ``(sum g)^2 / sum h``, and ``min_child_weight`` bounds the per-child
+    hessian sum — XGBoost's parameter of the same name, for free.
     """
     h_fn = H.get(heuristic)
     s, k, b, c = hist.shape

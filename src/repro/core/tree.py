@@ -68,10 +68,13 @@ class TreeConfig:
     # subtraction does not apply there.
     sibling_subtraction: bool = True
     sub_cache_bytes: int = 1 << 28    # skip caching levels wider than this
-    # Weighted builds only (build_tree's sample_weight, e.g. GOSS): a strict
-    # floor on the WEIGHTED example count of both split sides, preventing a
-    # couple of (1-a)/b-amplified small-gradient examples from supporting a
-    # split alone.  0.0 disables it; jnp select backend only.
+    # Weighted builds only (build_tree's sample_weight): a strict floor on
+    # the WEIGHTED example count of both split sides.  Under GOSS weights it
+    # prevents a couple of (1-a)/b-amplified small-gradient examples from
+    # supporting a split alone; under Newton boosting (core.losses, where
+    # sample_weight = h) the weighted count IS the hessian sum, so this is
+    # exactly XGBoost's min_child_weight.  0.0 disables it; jnp select
+    # backend only.
     min_child_weight: float = 0.0
 
 
@@ -199,8 +202,11 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
     pallas backend), so every count / label / purity statistic below is the
     GOSS-amplified unbiased estimate of its full-data value, and
     ``min_samples_split`` / ``min_samples_leaf`` bound the estimated
-    full-data counts.  The smaller-child choice stays on RAW routed rows
-    (scatter cost is rows, not weight).
+    full-data counts.  Float-accumulated weighted counts are rounded to
+    the NEAREST int before the int32 node-count cast, so an estimate of
+    2.9999997 does not spuriously trip ``min_samples_split=3`` (truncation
+    was the old behaviour).  The smaller-child choice stays on RAW routed
+    rows (scatter cost is rows, not weight).
     """
     s = num_slots
     k_local = bins.shape[1]
@@ -349,7 +355,7 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
         tstar, label, count_f, sse = regather((tstar, mean, count_f, sse))
         pseudo = (lbins <= tstar[jnp.clip(slot, 0, s - 1)]).astype(jnp.int32)
         stats = class_stats(pseudo, 2)
-        count = count_f.astype(jnp.int32)
+        count = jnp.round(count_f).astype(jnp.int32)
         pure = sse <= 1e-10 * jnp.maximum(count_f, 1.0)
         hist = build_hist(stats)
         dec = select(hist, n_num, n_cat, heuristic=heuristic,
@@ -361,7 +367,7 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
         count_f = tot[:, 0]
         safe = jnp.where(count_f > 0, count_f, 1.0)
         label = tot[:, 1] / safe
-        count = count_f.astype(jnp.int32)
+        count = jnp.round(count_f).astype(jnp.int32)
         pure = (tot[:, 2] - tot[:, 1] ** 2 / safe) <= 1e-10 * jnp.maximum(count_f, 1.0)
         dec = select(hist, n_num, n_cat, heuristic="sse",
                      min_leaf=min_samples_leaf)
@@ -369,7 +375,7 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
     else:
         hist = build_hist(stats)
         tot = hist[:, 0].sum(axis=1)                                # [S,C]
-        count = tot.sum(-1).astype(jnp.int32)
+        count = jnp.round(tot.sum(-1)).astype(jnp.int32)
         label = jnp.argmax(tot, axis=-1).astype(jnp.float32)
         pure = tot.max(-1) == tot.sum(-1)
         dec = select(hist, n_num, n_cat, heuristic=heuristic,
@@ -597,11 +603,13 @@ def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
     targets (regression modes).  ``level_callback(BuildState)`` is invoked
     after each completed level (checkpointing / progress hooks).
 
-    ``sample_weight`` (optional [M] f32, e.g. GOSS's per-example
-    amplification) weights every histogram row, so node counts, labels and
-    split scores become the weighted — for GOSS, unbiased full-data —
-    estimates; ``min_samples_split`` / ``min_samples_leaf`` then bound
-    weighted counts.  Supported for "classification" (disables the
+    ``sample_weight`` (optional [M] f32 — GOSS's per-example amplification,
+    a Newton boosting round's hessians, or their product) weights every
+    histogram row, so node counts, labels and split scores become the
+    weighted — for GOSS, unbiased full-data — estimates;
+    ``min_samples_split`` / ``min_samples_leaf`` then bound weighted counts
+    (rounded to nearest) and ``min_child_weight`` floors the per-child
+    weight sum (= the hessian sum under Newton boosting).  Supported for "classification" (disables the
     sibling-subtraction fast path: its bit-exactness contract does not
     survive float weights) and "regression_variance" (subtraction stays on
     under the float-tolerance contract); the label-split "regression" task

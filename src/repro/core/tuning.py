@@ -67,9 +67,12 @@ def toot_grid(tree: Tree, val_bins, y_val, n_num, *,
     if dmax_values is None:
         dmax_values = np.arange(1, t + 1, dtype=np.int32)
     if smin_values is None:
-        # paper: 0 .. 4% of train set, step 0.02%  (200 values)
+        # paper: 0 .. 4% of train set in steps of 0.02% — exactly 200
+        # values at the true step (0, 0.02%, ..., 3.98%; the 4% endpoint
+        # is the 201st grid line and is excluded)
         n = train_size if train_size is not None else int(tree.count[0])
-        smin_values = np.round(np.linspace(0, 0.04 * n, 201)).astype(np.int32)
+        smin_values = np.round(
+            np.arange(200) * (0.0002 * n)).astype(np.int32)
     nodes = paths(tree, val_bins, n_num)                   # [M,T]
     lab = tree.label[nodes]
     cnt = tree.count[nodes]

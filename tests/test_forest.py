@@ -19,11 +19,33 @@ def test_random_forest_beats_mean_tree():
         table, tr_y, n_classes=3)
     tb = transform(te_c, table)
     pred = rf.predict(tb)
-    accs = [float((np.asarray(predict_bins(t, tb, tab.n_num)) == te_y).mean())
-            for t, tab in zip(rf.trees, rf.tables)]
+    accs = [float((np.asarray(predict_bins(t, tb, nn)) == te_y).mean())
+            for t, nn in zip(rf.trees, rf.n_nums)]
     # the vote beats the average member (the point of bagging)
     assert (pred == te_y).mean() > np.mean(accs)
     assert (pred == te_y).mean() > 0.8
+    # predict only keeps the per-tree feature masks, never the bootstrapped
+    # [M, K] bins (the old self.tables memory leak)
+    assert not hasattr(rf, "tables")
+
+
+def test_random_forest_stacked_predict_bit_identical():
+    """The single-transfer stacked vmapped walk must reproduce the old
+    per-tree predict_bins + host-vote loop bit for bit."""
+    from repro.core import predict_bins
+    cols, y = make_classification(1200, 6, 4, seed=5, noise=0.1,
+                                  teacher_depth=4)
+    (tr_c, tr_y), _, (te_c, te_y) = train_val_test_split(cols, y)
+    table = fit_bins(tr_c, max_num_bins=32)
+    rf = RandomForest(n_trees=7, max_features=0.6,
+                      config=TreeConfig(max_depth=9)).fit(
+        table, tr_y, n_classes=4)
+    tb = transform(te_c, table)
+    votes = np.zeros((tb.shape[0], rf.n_classes))
+    for t, nn in zip(rf.trees, rf.n_nums):
+        p = np.asarray(predict_bins(t, tb, nn)).astype(int)
+        votes[np.arange(len(p)), p] += 1
+    np.testing.assert_array_equal(rf.predict(tb), votes.argmax(axis=1))
 
 
 def test_gbt_reduces_residuals_monotonically():

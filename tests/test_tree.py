@@ -100,3 +100,20 @@ def test_pure_node_stops():
     tree = build_tree(table, y, TreeConfig(max_depth=64), n_classes=2)
     assert tree.n_nodes == 3
     assert tree.max_tree_depth == 2
+
+
+def test_weighted_count_round_to_nearest():
+    """A float-accumulated weighted count of 2.9999997 must read as 3, not
+    be floor-truncated to 2 — truncation made min_samples_split=3 spuriously
+    refuse the split (the GOSS/hessian estimated-count bugfix)."""
+    cols = [[0.0, 0.0, 1.0, 1.0]]
+    y = np.asarray([0.0, 0.0, 10.0, 10.0], dtype=np.float32)
+    table = fit_bins(cols)
+    # four equal weights summing to just under 3 in float32
+    w = np.full(4, np.float32(0.75 * (1 - 1e-7)), dtype=np.float32)
+    assert w.sum(dtype=np.float32) < 3.0
+    cfg = TreeConfig(max_depth=4, min_samples_split=3,
+                     task="regression_variance")
+    tree = build_tree(table, y, cfg, sample_weight=w)
+    assert int(tree.count[0]) == 3       # rounded, not truncated
+    assert tree.n_nodes == 3             # ... so the perfect split happens

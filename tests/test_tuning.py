@@ -80,3 +80,14 @@ def test_toot_regression_rmse():
     # tuned RMSE beats the constant (root mean) predictor
     root_rmse = np.sqrt(((tr_y.mean() - va_y) ** 2).mean())
     assert -best < root_rmse
+
+
+def test_default_smin_sweep_has_200_values(setup):
+    """Paper protocol: min_split swept 0 .. 4% of the train set in steps of
+    0.02% — exactly 200 values at the true 0.02% step (an off-by-one made
+    it 201 values, i.e. an endpoint-inclusive grid)."""
+    table, full, tr_y, vb, va_y = setup
+    grid = toot_grid(full, vb, va_y, table.n_num, train_size=len(tr_y))
+    assert grid.metric.shape[1] == 200
+    np.testing.assert_array_equal(
+        grid.smin, np.round(np.arange(200) * (0.0002 * len(tr_y))))
