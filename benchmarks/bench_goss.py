@@ -81,9 +81,12 @@ def _level_rows(states_per_tree):
     return totals
 
 
-def _fit_counting(gbt, table, y):
+def _fit_states(gbt, table, y, **fit_kw):
     """Fit while grouping per-level BuildStates by tree (a tree's first
-    completed level is the root, depth cursor 2)."""
+    completed level is the root, depth cursor 2).  ``fit_kw`` forwards to
+    ``fit`` — the distributed benchmark passes ``mesh``/``dist`` so the
+    sharded loop is grouped by the SAME convention (its collective-bytes
+    accounting reads the raw states)."""
     per_tree, t0 = [], time.perf_counter()
 
     def cb(state):
@@ -91,8 +94,13 @@ def _fit_counting(gbt, table, y):
             per_tree.append([])
         per_tree[-1].append(state)
 
-    gbt.fit(table, y, level_callback=cb)
-    return _level_rows(per_tree), time.perf_counter() - t0
+    gbt.fit(table, y, level_callback=cb, **fit_kw)
+    return per_tree, time.perf_counter() - t0
+
+
+def _fit_counting(gbt, table, y, **fit_kw):
+    states, wall = _fit_states(gbt, table, y, **fit_kw)
+    return _level_rows(states), wall
 
 
 def run(m=20_000, k=10, n_trees=20, max_depth=6, n_bins=64, top_rate=0.1,

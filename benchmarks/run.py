@@ -16,8 +16,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import bench_selection, bench_udt_cls, bench_udt_reg
-from benchmarks import (bench_goss, bench_kernels, bench_logistic,
-                        bench_subtraction)
+from benchmarks import (bench_dist_goss, bench_goss, bench_kernels,
+                        bench_logistic, bench_subtraction)
 
 
 def main() -> None:
@@ -72,6 +72,15 @@ def main() -> None:
         bench_logistic.run()
     else:   # reduced-scale default
         bench_logistic.run(m=8_000, k=8, n_trees=10, max_depth=6)
+
+    print("# distributed GOSS boosting, forced 8-device mesh subprocess "
+          "(writes BENCH_dist_goss.json)")
+    if smoke:
+        bench_dist_goss.run(**bench_dist_goss.SMOKE)
+    elif full:
+        bench_dist_goss.run()
+    else:   # reduced-scale default
+        bench_dist_goss.run(m=8_000, k=8, n_trees=8, max_depth=6)
 
     if not smoke:
         print("# kernel micro-bench")

@@ -19,24 +19,62 @@ Both compose; the multi-pod dry-run lowers this exact step.  The build is
 level-synchronous, so fault tolerance = checkpoint the (arrays, assign,
 cursor) state each level and restart from the last completed level
 (checkpoint/tree_ckpt.py).
+
+Sharded GOSS sampling (the boosted-ensemble loop, core.forest)
+--------------------------------------------------------------
+``make_sharded_sampler`` runs the per-round GOSS draw mesh-wide without
+ever moving an example row between shards:
+
+  * each data shard ranks its local rows by the Newton leverage
+    ``|g| * sqrt(h)`` and takes a **static per-shard quota**
+    ``q_top = ceil(top_n / d)`` via one local ``top_k``;
+  * the only collective is the **threshold merge**: each shard's quota
+    boundary (its ``q_top``-th largest leverage) is ``pmax``-merged over the
+    data axes — ONE scalar per data axis, not O(M).  Every row anywhere
+    with leverage >= the merged threshold is *certifiably* inside the true
+    global top-``top_n`` set (pigeonhole: some shard holds >= ``q_top``
+    global-top rows, so the merged boundary is >= the global cut), and
+    each shard holds at most ``q_top`` of them, so the kept set needs no
+    cross-shard rebalance;
+  * the small-leverage remainder is sampled **per shard**: ``q_oth`` uniform
+    draws from the shard's non-top rows, weighted by the exact per-shard
+    amplification ``r_s / q_oth`` (``r_s`` = that shard's remainder size) —
+    the stratified analogue of GOSS's global ``(1-a)/b``, and unbiased per
+    stratum, so the total selected weight is exactly M.
+
+Selected indices and weights stay shard-local as an [m_loc] weight/assign
+mask (weight 0 / assign -1 rows are inert in the histogram scatter and the
+router), so there is NO all_to_all, NO dynamic-shape gather, and every
+shape is static; the draw is deterministic under the fit seed via
+``fold_in(key, data_shard_index)``.  ``core.forest.goss_sample_sharded_ref``
+is the bit-identical single-device reference (tests/test_dist_goss.py).
+
+Collective-bytes accounting for the composed boosting round: with sibling
+subtraction + ``slot_scatter`` both on, the per-level histogram collective
+reduce_scatters the packed smaller-child pair axis — <= ``S/2 * K * B * C``
+bytes split over the data shards — the sampling merge adds O(d) scalar
+bytes per round, and the score update (``make_sharded_walk``) psums one
+routing bit per example per walk step over the model axis only.  Nothing
+in the round loop scales collective traffic with M.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.compat import shard_map_norep
 from repro.core.binning import BinnedTable
 from repro.core.tree import (Tree, TreeConfig, _auto_chunk_slots, _chunk_step,
-                             _grow, _init_arrays, _prepare, _route_step,
-                             _subtract_eligible)
+                             _grow, _init_arrays, _node_predicate, _prepare,
+                             _route_step, _subtract_eligible)
 
-__all__ = ["DistConfig", "build_tree_distributed", "make_sharded_step"]
+__all__ = ["DistConfig", "DistributedBuilder", "build_tree_distributed",
+           "make_sharded_step", "make_sharded_sampler", "make_sharded_walk"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,10 +107,41 @@ def _pad_to(x, mult, axis, fill):
     return np.pad(x, widths, constant_values=fill)
 
 
-def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
-                      k_pad: int, c: int, max_nodes: int, num_slots: int,
-                      use_sub: bool = False, want_hist: bool = False):
-    """Build the shard_map'd level-chunk step for a given slot count.
+def _freeze_kw(kw: dict) -> tuple:
+    return tuple(sorted(kw.items()))
+
+
+# Module-level caches for ALL the jitted sharded functions (level step,
+# router, round sampler, ensemble walk).  A per-call cache (the pre-PR-5
+# state) meant every build_tree_distributed call minted fresh jax.jit
+# objects, so an ensemble of T trees retraced + recompiled the level step T
+# times — and a refit (hyper-parameter sweep, back-to-back bench fits)
+# would recompile the sampler/walk too; keyed on (mesh, dist, static
+# config) the SAME jit object serves every same-shape build and jax's own
+# trace cache makes the compile happen once (tests/test_dist_goss.py
+# asserts this for the step cache).
+_STEP_CACHE: dict = {}
+_ROUTE_CACHE: dict = {}
+_SAMPLER_CACHE: dict = {}
+_WALK_CACHE: dict = {}
+_CACHE_CAP = 64       # per-cache entry bound: a sweep over many distinct
+                      # configs/shapes evicts oldest-first instead of
+                      # pinning compiled executables (and their Mesh
+                      # references) for the whole process lifetime
+
+
+def _cache_put(cache: dict, key, fn):
+    if len(cache) >= _CACHE_CAP:
+        cache.pop(next(iter(cache)))      # dicts iterate insertion-first
+    cache[key] = fn
+    return fn
+
+
+def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, num_slots: int,
+                      use_sub: bool = False, want_hist: bool = False,
+                      weighted: bool = False):
+    """Build (or fetch from the module cache) the shard_map'd level-chunk
+    step for a given slot count.
 
     ``use_sub`` / ``want_hist`` select the sibling-subtraction variants: the
     parent histogram rows come in (and the cached level histogram goes out)
@@ -81,8 +150,19 @@ def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
     (x 1/d_shards composed) per device and the per-level collective covers
     only the packed smaller-child histogram.
 
+    ``weighted`` appends a per-example [M] float32 weight channel, sharded
+    with ``P(dist.data_axes)`` like every other example row — GOSS's
+    amplification and a Newton round's hessians enter the in-kernel weight
+    channel of the histogram pass shard-locally, so weighting adds ZERO
+    collective bytes.
+
     This is also what launch/dryrun.py lowers for the UDT rows of the
     roofline table (the paper-technique cell)."""
+    cache_key = (mesh, dist, _freeze_kw(kw), num_slots, use_sub, want_hist,
+                 weighted)
+    hit = _STEP_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
     dspec = P(dist.data_axes)          # examples
     fspec = P(None, dist.model_axis)   # [M, K] -> features on model axis
     rep = P()
@@ -99,12 +179,19 @@ def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
     sspec = (P(dist.data_axes, dist.model_axis) if scatter_ok else fspec)
     step_kw = dict(kw, num_slots=num_slots, data_axes=dist.data_axes,
                    model_axis=dist.model_axis, slot_scatter=scatter_ok,
-                   use_sub=use_sub, want_hist=want_hist)
+                   use_sub=use_sub, want_hist=want_hist, weighted=weighted)
 
-    def body(bins, stats, lbins, yv, assign, arrays, pp, n_num, n_cat,
-             cs, cn, nf, depth):
-        return _chunk_step(bins, stats, lbins, yv, assign, arrays, pp, n_num,
-                           n_cat, cs, cn, nf, depth, **step_kw)
+    if weighted:
+        def body(bins, stats, lbins, yv, assign, arrays, pp, n_num, n_cat,
+                 cs, cn, nf, depth, weights):
+            return _chunk_step(bins, stats, lbins, yv, assign, arrays, pp,
+                               n_num, n_cat, cs, cn, nf, depth,
+                               weights=weights, **step_kw)
+    else:
+        def body(bins, stats, lbins, yv, assign, arrays, pp, n_num, n_cat,
+                 cs, cn, nf, depth):
+            return _chunk_step(bins, stats, lbins, yv, assign, arrays, pp,
+                               n_num, n_cat, cs, cn, nf, depth, **step_kw)
 
     in_specs = (P(dist.data_axes, dist.model_axis),  # bins [M,K]
                 dspec,                               # stats [M,C]
@@ -116,21 +203,295 @@ def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, m_pad: int,
                 P(dist.model_axis),                  # n_num [K]
                 P(dist.model_axis),                  # n_cat [K]
                 rep, rep, rep, rep)                  # scalars
+    if weighted:
+        in_specs = in_specs + (dspec,)               # sample weights [M]
     out_specs = (rep, rep, sspec if want_hist else rep)
     sharded = shard_map_norep(body, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs)
-    return jax.jit(sharded)
+    fn = jax.jit(sharded)
+    return _cache_put(_STEP_CACHE, cache_key, fn)
 
 
 def make_sharded_route(mesh: Mesh, dist: DistConfig):
+    cache_key = (mesh, dist)
+    hit = _ROUTE_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
+
     def body(bins, assign, arrays, n_num, start, end):
         return _route_step(bins, assign, arrays, n_num, start, end,
                            model_axis=dist.model_axis)
 
     in_specs = (P(dist.data_axes, dist.model_axis), P(dist.data_axes),
                 P(), P(dist.model_axis), P(), P())
-    return jax.jit(shard_map_norep(body, mesh=mesh, in_specs=in_specs,
-                                   out_specs=P(dist.data_axes)))
+    fn = jax.jit(shard_map_norep(body, mesh=mesh, in_specs=in_specs,
+                                 out_specs=P(dist.data_axes)))
+    return _cache_put(_ROUTE_CACHE, cache_key, fn)
+
+
+def _data_shard_index(data_axes):
+    """Flattened data-shard index of the calling shard (mesh-major order,
+    matching the contiguous row-block layout of ``P(data_axes)``)."""
+    idx = jnp.int32(0)
+    for ax in data_axes:
+        idx = idx * compat.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def make_sharded_sampler(mesh: Mesh, dist: DistConfig, loss, goss,
+                         m: int, q_top: int, q_oth: int):
+    """Jitted per-round sampling step of the sharded boosting loop.
+
+    Returns ``fn(y, raw, key) -> (z, w, assign0)`` over [m_pad] arrays
+    sharded with ``P(dist.data_axes)``: the Newton target ``z = -g/h``, the
+    build weight ``w`` (GOSS amplification x hessian; 0 drops the row) and
+    the initial node assignment (0 selected / -1 inert).  With ``goss``
+    None every valid row is selected at its hessian weight.
+
+    The GOSS draw is the per-shard-quota scheme described in the module
+    docstring: one local ``top_k`` per shard, one scalar ``pmax`` threshold
+    merge per data axis, per-shard uniform remainder draws with the exact
+    ``r_s / q_oth`` amplification.  No cross-shard row traffic, no dynamic
+    shapes; deterministic under ``key`` via the data-shard index fold-in.
+    """
+    from repro.core.forest import _goss_shard_boundary, _goss_shard_weights
+    cache_key = (mesh, dist, loss, goss, m, q_top, q_oth)
+    hit = _SAMPLER_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
+    dspec = P(dist.data_axes)
+
+    def body(y, raw, key):
+        g, h = loss.grad_hess(y, raw)
+        z = loss.newton_target(g, h)
+        m_loc = y.shape[0]
+        idx = _data_shard_index(dist.data_axes)
+        rows = idx * m_loc + jnp.arange(m_loc, dtype=jnp.int32)
+        valid = rows < m
+        if goss is None:
+            w = jnp.where(valid, h, 0.0).astype(jnp.float32)
+            assign0 = jnp.where(valid, 0, -1).astype(jnp.int32)
+            return z, w, assign0
+        rank = g if loss.constant_hessian else g * jnp.sqrt(h)
+        u = jax.random.uniform(jax.random.fold_in(key, idx), (m_loc,))
+        lv = jnp.where(valid, jnp.abs(rank), -1.0)
+        u = jnp.where(valid, u, -1.0)
+        tau = _goss_shard_boundary(lv, q_top)
+        for ax in dist.data_axes:
+            tau = jax.lax.pmax(tau, ax)
+        w_goss = _goss_shard_weights(lv, u, tau, q_top, q_oth)
+        w = (w_goss if loss.constant_hessian else w_goss * h)
+        w = w.astype(jnp.float32)
+        assign0 = jnp.where(w_goss > 0, 0, -1).astype(jnp.int32)
+        return z, w, assign0
+
+    fn = jax.jit(shard_map_norep(
+        body, mesh=mesh, in_specs=(dspec, dspec, P()),
+        out_specs=(dspec, dspec, dspec)))
+    return _cache_put(_SAMPLER_CACHE, cache_key, fn)
+
+
+def make_sharded_walk(mesh: Mesh, dist: DistConfig, num_steps: int):
+    """Jitted sharded raw-score update: ``fn(raw, arrays, bins, n_num, lr)``
+    returns ``raw + lr * leaf_label`` with the Algorithm-7 walk evaluated on
+    the (data, model)-sharded bins.
+
+    Mirrors ``predict._walk`` (no depth/min-split limits — the ensemble
+    update always walks to the leaf) but keeps the bins feature-sharded:
+    each step descends through ``tree._node_predicate`` — the SAME
+    feature-parallel predicate the level router uses (one psum'd bit per
+    example over the model axis) — so the raw scores never leave their
+    data shard and the boosting loop's score state stays device-resident
+    across rounds."""
+    cache_key = (mesh, dist, num_steps)
+    hit = _WALK_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
+    dspec = P(dist.data_axes)
+
+    def body(raw, arrays, bins, n_num, lr):
+        node0 = jnp.zeros((bins.shape[0],), dtype=jnp.int32)
+
+        def step(_, node):
+            can = (~arrays["leaf"][node]) & (arrays["left"][node] >= 0)
+            f = jnp.maximum(arrays["feat"][node], 0)
+            pos = _node_predicate(bins, f, arrays["op"][node],
+                                  arrays["tbin"][node], n_num,
+                                  dist.model_axis)
+            nxt = jnp.where(pos, arrays["left"][node], arrays["right"][node])
+            return jnp.where(can, nxt, node)
+
+        node = jax.lax.fori_loop(0, num_steps, step, node0)
+        return raw + lr * arrays["label"][node]
+
+    in_specs = (dspec, P(), P(dist.data_axes, dist.model_axis),
+                P(dist.model_axis), P())
+    fn = jax.jit(shard_map_norep(body, mesh=mesh, in_specs=in_specs,
+                                 out_specs=dspec))
+    return _cache_put(_WALK_CACHE, cache_key, fn)
+
+
+class DistributedBuilder:
+    """Stage a BinnedTable on the mesh once; build many trees from it.
+
+    ``build_tree_distributed`` restages (pads + device_puts) the [M, K]
+    bins on every call, which is fine for one tree but would serialise a
+    host round-trip per round of a boosted ensemble.  The builder stages
+    the table, the feature vectors and the dead-constant statistic rows at
+    construction; ``build`` then accepts per-round targets / weights /
+    assignments either as host arrays (padded and placed here) or as
+    already-sharded [m_pad] device arrays (the device-resident loop of
+    ``GradientBoostedTrees.fit(mesh=...)`` — no host staging per tree).
+
+    Weight-0 / assign -1 rows are inert end to end (dropped by the
+    histogram scatter, never routed), which is how the sharded GOSS draw
+    expresses its selection without gathering rows across shards.
+    """
+
+    def __init__(self, table: BinnedTable, config: TreeConfig = TreeConfig(),
+                 *, mesh: Mesh, dist: DistConfig = DistConfig(),
+                 n_classes: int | None = None):
+        if config.min_child_weight and config.select_backend == "pallas":
+            raise ValueError("min_child_weight needs select_backend='jnp' "
+                             "(the fused split-scan kernel has no weight "
+                             "floor)")
+        self.table, self.config = table, config
+        self.mesh, self.dist = mesh, dist
+        m, k = table.bins.shape
+        self.m, self.k, self.b = int(m), int(k), int(table.n_bins)
+        self.d_shards = max(1, int(np.prod(
+            [mesh.shape[a] for a in dist.data_axes])))
+        self.f_shards = mesh.shape[dist.model_axis] if dist.model_axis else 1
+
+        # pad examples with slot -1 sentinels (assign = -1 keeps them inert)
+        # and features with all-missing columns (never selectable)
+        bins_p = _pad_to(_pad_to(np.asarray(table.bins), self.d_shards, 0, 0),
+                         self.f_shards, 1, 0)
+        self.m_pad, self.k_pad = bins_p.shape
+        if self.k_pad > self.k:   # padded features: all values in missing bin
+            bins_p[:, self.k:] = 0
+
+        if config.task == "classification":
+            if n_classes is None:
+                raise ValueError("DistributedBuilder needs n_classes for "
+                                 "classification (build_tree_distributed "
+                                 "infers it from y)")
+            self.c = int(n_classes)
+        elif config.task == "regression_variance":
+            self.c = 3
+        else:
+            self.c = 2
+        self.n_classes = n_classes
+
+        self._rows = NamedSharding(mesh, P(dist.data_axes))
+        put = lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec))
+        self.bins_d = put(bins_p, P(dist.data_axes, dist.model_axis))
+        self.n_num_d = put(_pad_to(np.asarray(table.n_num), self.f_shards,
+                                   0, 0), P(dist.model_axis))
+        self.n_cat_d = put(_pad_to(np.asarray(table.n_cat), self.f_shards,
+                                   0, 0), P(dist.model_axis))
+        if config.task == "regression_variance":
+            # stats / lbins are dead operands for this task (the moment rows
+            # are formed from yv inside the level step); staged once.
+            self._stats_d = put(np.zeros((self.m_pad, 3), np.float32),
+                                P(dist.data_axes))
+            self._lbins_d = put(np.zeros((self.m_pad,), np.int32),
+                                P(dist.data_axes))
+
+        self.max_nodes = config.max_nodes or min(2 * self.m + 1, 1 << 22)
+        self.s_cap = config.chunk_slots or _auto_chunk_slots(
+            self.k_pad, self.b, self.c, config.hist_budget_bytes)
+        assign0 = np.full((self.m_pad,), -1, dtype=np.int32)
+        assign0[:self.m] = 0            # padding rows never join any node
+        self._assign0 = assign0
+        self._route = make_sharded_route(mesh, dist)
+        self._dummy_pp = jnp.zeros((1, 1, 1, 1), dtype=jnp.float32)
+
+    def _stage_rows(self, x, fill, dtype):
+        """Shard a per-example vector over the data axes: host [m] input is
+        padded to m_pad here; an already-padded device array (the
+        device-resident loop) is just re-placed (a no-op when it already
+        carries the right sharding)."""
+        if isinstance(x, jax.Array) and x.shape[0] == self.m_pad:
+            # astype matches the host path's coercion (an int/f64 target
+            # must not flow into the f32 moment channels); identity — the
+            # same array object — when the dtype already agrees.
+            return jax.device_put(x.astype(dtype), self._rows)
+        return jax.device_put(
+            _pad_to(np.asarray(x, dtype), self.d_shards, 0, fill),
+            self._rows)
+
+    def build(self, y, sample_weight=None, assign=None,
+              level_callback=None) -> Tree:
+        """Build one tree.  ``y`` / ``sample_weight`` / ``assign`` are host
+        [m] arrays or sharded [m_pad] device arrays (see class docstring);
+        ``assign`` defaults to every valid row active at the root, and a
+        caller-supplied assignment (the GOSS selection mask) must keep
+        padding rows at -1."""
+        config, dist, mesh = self.config, self.dist, self.mesh
+        weighted = sample_weight is not None
+        if weighted and config.task == "regression":
+            raise ValueError("sample_weight is unsupported for the "
+                             "label-split 'regression' task (use "
+                             "'regression_variance')")
+        if config.task == "regression_variance":
+            yv_d = self._stage_rows(y, 0.0, np.float32)
+            stats_d, lbins_d = self._stats_d, self._lbins_d
+            c, n_label_bins = 3, 1
+        else:
+            _, stats_np, lbins_np, yv_np, c, n_label_bins = _prepare(
+                self.table, np.asarray(y), config, self.n_classes)
+            stats_d = self._stage_rows(np.asarray(stats_np), 0.0, np.float32)
+            lbins_d = self._stage_rows(lbins_np, 0, np.int32)
+            yv_d = self._stage_rows(yv_np, 0.0, np.float32)
+        w_d = (self._stage_rows(sample_weight, 0.0, np.float32)
+               if weighted else None)
+        assign_d = (self._stage_rows(assign, -1, np.int32)
+                    if assign is not None
+                    else jax.device_put(self._assign0, self._rows))
+
+        kw = dict(n_bins=self.b, heuristic=config.heuristic, task=config.task,
+                  min_samples_split=config.min_samples_split,
+                  min_samples_leaf=config.min_samples_leaf,
+                  max_depth=config.max_depth, max_nodes=self.max_nodes,
+                  hist_backend=config.hist_backend,
+                  select_backend=config.select_backend,
+                  n_label_bins=n_label_bins,
+                  min_child_weight=config.min_child_weight)
+
+        # sibling subtraction halves both scatter work and collective bytes
+        # and COMPOSES with slot_scatter (packed pair axis reduce_scattered,
+        # parent cache sharded over (slot, feature)).  The budget gate
+        # conservatively uses the feature-shard row bytes.  Weighted builds
+        # (GOSS / Newton hessians) keep eligibility only under the
+        # float-tolerance contract — same gate as the local builder.
+        subtract = (((self.k_pad // self.f_shards) * self.b * c * 4,
+                     config.sub_cache_bytes)
+                    if _subtract_eligible(config, self.m, weighted)
+                    else None)
+
+        def step(arrays, assign_, cs, cn, next_free, depth, num_slots, pp,
+                 use_sub, want_hist):
+            fn = make_sharded_step(mesh, dist, kw, num_slots, use_sub,
+                                   want_hist, weighted)
+            args = [self.bins_d, stats_d, lbins_d, yv_d, assign_, arrays,
+                    pp if use_sub else self._dummy_pp, self.n_num_d,
+                    self.n_cat_d, jnp.int32(cs), jnp.int32(cn),
+                    jnp.int32(next_free), jnp.int32(depth)]
+            if weighted:
+                args.append(w_d)
+            return fn(*args)
+
+        def route(assign_, arrays, start, end):
+            return self._route(self.bins_d, assign_, arrays, self.n_num_d,
+                               jnp.int32(start), jnp.int32(end))
+
+        arrays = _init_arrays(self.max_nodes)
+        arrays, n_nodes = _grow(step, route, arrays, assign_d, self.s_cap,
+                                self.max_nodes, level_callback,
+                                subtract=subtract,
+                                max_depth=config.max_depth)
+        return Tree(n_nodes=n_nodes, **arrays)
 
 
 def build_tree_distributed(table: BinnedTable, y,
@@ -138,96 +499,20 @@ def build_tree_distributed(table: BinnedTable, y,
                            mesh: Mesh | None = None,
                            dist: DistConfig = DistConfig(),
                            n_classes: int | None = None,
-                           level_callback=None) -> Tree:
+                           level_callback=None, sample_weight=None) -> Tree:
     """Distributed UDT training.  Produces the SAME tree as build_tree
     (tests/test_distributed.py asserts exact agreement) while sharding
     examples over ``dist.data_axes`` and features over ``dist.model_axis``.
-    Per-example sample weights are not distributed yet (ROADMAP: GOSS)."""
-    if config.min_child_weight and config.select_backend == "pallas":
-        raise ValueError("min_child_weight needs select_backend='jnp' (the "
-                         "fused split-scan kernel has no weight floor)")
-    bins_np, stats_np, lbins_np, yv_np, c, n_label_bins = _prepare(
-        table, y, config, n_classes)
-    # the distributed build stages inputs on host (padding below mutates in
-    # place); _prepare may hand back device arrays for regression_variance
-    bins_np, stats_np, lbins_np, yv_np = (
-        np.asarray(bins_np), np.asarray(stats_np), np.asarray(lbins_np),
-        np.asarray(yv_np))
-    m, k = bins_np.shape
-    b = int(table.n_bins)
 
-    d_shards = int(np.prod([mesh.shape[a] for a in dist.data_axes]))
-    f_shards = mesh.shape[dist.model_axis] if dist.model_axis else 1
-
-    # pad examples with slot -1 sentinels (assign = -1 keeps them inert) and
-    # features with all-missing columns (never selectable)
-    bins_p = _pad_to(_pad_to(bins_np, d_shards, 0, 0), f_shards, 1, 0)
-    m_pad, k_pad = bins_p.shape
-    if k_pad > k:  # padded features: every value in the (unused) missing bin
-        bins_p[:, k:] = 0
-    stats_p = _pad_to(stats_np, d_shards, 0, 0.0)
-    lbins_p = _pad_to(lbins_np, d_shards, 0, 0)
-    yv_p = _pad_to(yv_np, d_shards, 0, 0.0)
-    n_num_p = _pad_to(np.asarray(table.n_num), f_shards, 0, 0)
-    n_cat_p = _pad_to(np.asarray(table.n_cat), f_shards, 0, 0)
-
-    def put(x, spec):
-        return jax.device_put(x, NamedSharding(mesh, spec))
-
-    bins_d = put(bins_p, P(dist.data_axes, dist.model_axis))
-    stats_d = put(stats_p, P(dist.data_axes))
-    lbins_d = put(lbins_p, P(dist.data_axes))
-    yv_d = put(yv_p, P(dist.data_axes))
-    n_num_d = put(n_num_p, P(dist.model_axis))
-    n_cat_d = put(n_cat_p, P(dist.model_axis))
-
-    max_nodes = config.max_nodes or min(2 * m + 1, 1 << 22)
-    s_cap = config.chunk_slots or _auto_chunk_slots(
-        k_pad, b, c, config.hist_budget_bytes)
-    arrays = _init_arrays(max_nodes)
-    assign0 = np.full((m_pad,), -1, dtype=np.int32)
-    assign0[:m] = 0                     # padding rows never join any node
-    assign = put(assign0, P(dist.data_axes))
-
-    kw = dict(n_bins=b, heuristic=config.heuristic, task=config.task,
-              min_samples_split=config.min_samples_split,
-              min_samples_leaf=config.min_samples_leaf,
-              max_depth=config.max_depth, max_nodes=max_nodes,
-              hist_backend=config.hist_backend,
-              select_backend=config.select_backend,
-              n_label_bins=n_label_bins,
-              min_child_weight=config.min_child_weight)
-
-    step_cache: dict = {}
-    route_fn = make_sharded_route(mesh, dist)
-    dummy_pp = jnp.zeros((1, 1, 1, 1), dtype=jnp.float32)
-
-    # sibling subtraction halves both scatter work and collective bytes and
-    # now COMPOSES with slot_scatter: the packed pair axis is
-    # reduce_scattered and the parent cache is sharded over
-    # (slot, feature).  The budget gate conservatively uses the
-    # feature-shard row bytes (the composed cache is smaller still).
-    subtract = (((k_pad // f_shards) * b * c * 4, config.sub_cache_bytes)
-                if _subtract_eligible(config, m) else None)
-
-    def step(arrays, assign, cs, cn, next_free, depth, num_slots, pp,
-             use_sub, want_hist):
-        key = (num_slots, use_sub, want_hist)
-        if key not in step_cache:
-            step_cache[key] = make_sharded_step(
-                mesh, dist, kw, m_pad, k_pad, c, max_nodes, num_slots,
-                use_sub, want_hist)
-        return step_cache[key](
-            bins_d, stats_d, lbins_d, yv_d, assign, arrays,
-            pp if use_sub else dummy_pp, n_num_d, n_cat_d,
-            jnp.int32(cs), jnp.int32(cn), jnp.int32(next_free),
-            jnp.int32(depth))
-
-    def route(assign, arrays, start, end):
-        return route_fn(bins_d, assign, arrays, n_num_d, jnp.int32(start),
-                        jnp.int32(end))
-
-    arrays, n_nodes = _grow(step, route, arrays, assign, s_cap, max_nodes,
-                            level_callback, subtract=subtract,
-                            max_depth=config.max_depth)
-    return Tree(n_nodes=n_nodes, **arrays)
+    ``sample_weight`` (optional [M] f32) shards with ``P(dist.data_axes)``
+    and enters the in-kernel weight channel exactly as in the local
+    builder — GOSS amplification, Newton hessians, or their product — with
+    the same task gating (see ``build_tree``).  One-shot wrapper around
+    ``DistributedBuilder``; ensemble loops should hold a builder instead
+    so the table is staged once."""
+    if config.task == "classification" and n_classes is None:
+        n_classes = int(np.asarray(y).max()) + 1
+    builder = DistributedBuilder(table, config, mesh=mesh, dist=dist,
+                                 n_classes=n_classes)
+    return builder.build(y, sample_weight=sample_weight,
+                         level_callback=level_callback)

@@ -41,6 +41,20 @@ hessian weight on the sampled rows.  The boosting loop is device-resident:
 raw scores, gradients/hessians, the ranking, the sampling, and the link
 function all stay jax Arrays across trees, and ensemble prediction batches
 every tree's walk on device with a single host transfer at the end.
+
+``fit(mesh=..., dist=DistConfig(...))`` runs the SAME round loop sharded
+over the mesh (core.distributed): examples over ``dist.data_axes``,
+features over ``dist.model_axis``, with every per-round array staying
+sharded across rounds and each tree built by ``DistributedBuilder`` — so
+sibling subtraction, GOSS and slot_scatter compose mesh-wide.  The GOSS
+draw becomes the per-shard-quota scheme (``_goss_shard_boundary`` /
+``_goss_shard_weights``): one local ``top_k`` per shard, a scalar ``pmax``
+threshold merge as the ONLY sampling collective, and per-shard stratified
+remainder draws with the exact ``r_s / q_oth`` amplification — selected
+indices and weights never leave their shard (a weight/assign mask, not a
+gather), shapes stay static, and the draw is deterministic under the fit
+seed.  ``goss_sample_sharded_ref`` is the bit-identical single-device
+reference used by the parity tests.
 """
 from __future__ import annotations
 
@@ -57,7 +71,8 @@ from repro.core.losses import get_loss
 from repro.core.predict import WALK_FIELDS, _walk, predict_bins
 from repro.core.tree import Tree, TreeConfig, build_tree
 
-__all__ = ["RandomForest", "GradientBoostedTrees", "GossConfig"]
+__all__ = ["RandomForest", "GradientBoostedTrees", "GossConfig",
+           "goss_sample_sharded_ref"]
 
 
 def _subsample_table(table: BinnedTable, feat_mask: np.ndarray) -> BinnedTable:
@@ -97,6 +112,9 @@ class RandomForest:
     seed: int = 0
 
     def fit(self, table: BinnedTable, y, n_classes: int):
+        # drop the stacked-walk cache FIRST: a refit that fails midway must
+        # never leave predict serving the previous fit's trees
+        self._stacked = None            # predict's lazy stacked-walk cache
         rng = np.random.default_rng(self.seed)
         m, k = table.bins.shape
         self.n_classes = n_classes
@@ -104,7 +122,6 @@ class RandomForest:
         # predict only needs each tree's feature mask (n_num); retaining the
         # bootstrapped [M, K] bins per tree was an M*K*T memory leak.
         self.n_nums: list[np.ndarray] = []
-        self._stacked = None            # predict's lazy stacked-walk cache
         y = np.asarray(y)
         for _ in range(self.n_trees):
             fm = rng.uniform(size=k) < self.max_features
@@ -208,6 +225,15 @@ class GossConfig:
         other_n = min(m - top_n, max(1, int(math.ceil(self.other_rate * m))))
         return top_n, other_n
 
+    def shard_quota(self, m: int, d_shards: int) -> tuple[int, int]:
+        """Static per-shard (top, other) quotas for the sharded draw: ceil
+        splits of ``sample_sizes`` so the union covers at least the global
+        sample whatever the shard count.  Static per fit — every round and
+        every shard share one compiled sampling step."""
+        top_n, other_n = self.sample_sizes(m)
+        ceil_div = lambda a: -(-a // d_shards) if a else 0
+        return ceil_div(top_n), ceil_div(other_n)
+
 
 @functools.partial(jax.jit, static_argnames=("top_n", "other_n", "amp"))
 def _goss_sample(grad, key, *, top_n, other_n, amp):
@@ -235,6 +261,89 @@ def _goss_sample(grad, key, *, top_n, other_n, amp):
     w = jnp.concatenate([jnp.ones((top_n,), jnp.float32),
                          jnp.full((other_n,), amp, jnp.float32)])
     return idx, w
+
+
+# ---------------------------------------------------------------------------
+# sharded GOSS (core.distributed.make_sharded_sampler): per-shard quota
+# top_k + a scalar pmax threshold merge + per-shard stratified remainder.
+# The two stage functions below are the WHOLE per-shard computation; the
+# mesh sampler runs them inside shard_map with lax.pmax between, and
+# ``goss_sample_sharded_ref`` runs them vmapped over contiguous row blocks
+# with a plain max — bit-identical selections (tests/test_dist_goss.py),
+# which is what makes single-device parity of the distributed fit testable.
+# ---------------------------------------------------------------------------
+
+def _goss_shard_boundary(lv, q_top: int):
+    """This shard's quota boundary: the ``q_top``-th largest leverage.
+
+    ``lv`` must carry -1 for invalid/padding rows (|leverage| >= 0 for
+    valid ones).  The pmax merge of these boundaries over the data shards
+    is >= the true global top-``top_n`` cut (pigeonhole: some shard holds
+    >= q_top of the global top rows), so rows clearing the merged
+    threshold are certifiably inside the global top set.  +inf when the
+    top quota is empty (top_rate = 0)."""
+    if q_top == 0:
+        return jnp.float32(jnp.inf)
+    return jax.lax.top_k(lv, q_top)[0][-1]
+
+
+def _goss_shard_weights(lv, u, tau, q_top: int, q_oth: int):
+    """Per-shard GOSS weights under the merged global threshold ``tau``.
+
+    The top set is the intersection of this shard's local top-``q_top``
+    rows with ``{leverage >= tau}``, at weight 1: the threshold makes the
+    set globally consistent (every member is certifiably inside the true
+    global top-``top_n``), the quota caps it at ``q_top`` rows per shard —
+    including under mass leverage ties (a logistic round 0 with balanced
+    classes has IDENTICAL leverage everywhere; an uncapped threshold set
+    would then keep all M rows and forfeit the sampling reduction, where
+    ``top_k``'s deterministic tie-break keeps exactly the quota).
+    From the remainder — valid rows outside the top set — ``q_oth`` rows
+    are drawn uniformly (``u`` must carry -1 outside the remainder pool)
+    and weighted by the EXACT per-shard amplification ``r_s / q_oth``
+    (``r_s`` = remainder size): the stratified analogue of GOSS's global
+    ``(1-a)/b``, unbiased per shard, and the total selected weight over
+    the mesh is exactly M.  Unselected rows get weight 0 (inert in the
+    histogram scatter and the router — the shard-local selection mask)."""
+    if q_top:
+        _, ti = jax.lax.top_k(lv, q_top)
+        in_quota = jnp.zeros(lv.shape, bool).at[ti].set(True)
+        top = in_quota & (lv >= tau) & (lv >= 0)
+    else:
+        top = jnp.zeros(lv.shape, bool)
+    w = top.astype(jnp.float32)
+    if q_oth == 0:
+        return w
+    pool = (lv >= 0) & ~top
+    u = jnp.where(pool, u, -1.0)
+    r = pool.sum(dtype=jnp.int32)
+    _, oi = jax.lax.top_k(u, q_oth)
+    drawn = jnp.zeros_like(pool).at[oi].set(True) & pool
+    amp = r.astype(jnp.float32) / jnp.maximum(jnp.minimum(q_oth, r), 1)
+    return w + drawn.astype(jnp.float32) * amp
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d_shards", "m_valid", "q_top", "q_oth"))
+def goss_sample_sharded_ref(rank, key, *, d_shards, m_valid, q_top, q_oth):
+    """Single-device reference of the sharded GOSS draw: [m_pad] weights
+    (0 = unselected), bit-identical to ``make_sharded_sampler``'s
+    ``w_goss`` for the same key.  Rows are split into ``d_shards``
+    contiguous blocks — the layout of ``P(data_axes)`` sharding — and each
+    block runs the same per-shard stages with ``fold_in(key, block)``."""
+    m_pad = rank.shape[0]
+    m_loc = m_pad // d_shards
+    lv = jnp.where(jnp.arange(m_pad) < m_valid, jnp.abs(rank), -1.0)
+    lv = lv.reshape(d_shards, m_loc)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(d_shards, dtype=jnp.int32))
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, (m_loc,)))(keys)
+    u = jnp.where(lv >= 0, u, -1.0)
+    tau = jnp.max(jax.vmap(
+        lambda x: _goss_shard_boundary(x, q_top))(lv))
+    w = jax.vmap(
+        lambda a, b: _goss_shard_weights(a, b, tau, q_top, q_oth))(lv, u)
+    return w.reshape(m_pad)
 
 
 @functools.partial(jax.jit, static_argnames=("num_steps",))
@@ -283,7 +392,17 @@ class GradientBoostedTrees:
     loss: str = "squared"
     seed: int = 0
 
-    def fit(self, table: BinnedTable, y, level_callback=None):
+    def fit(self, table: BinnedTable, y, level_callback=None, *,
+            mesh=None, dist=None):
+        """Fit the ensemble.  With ``mesh`` set the whole round loop runs
+        sharded over ``dist.data_axes`` / ``dist.model_axis`` (see
+        ``_fit_sharded`` and core.distributed): same API, same trees up to
+        the documented weighted-moment tolerance."""
+        # drop the stacked-walk cache FIRST: a refit that fails midway must
+        # never leave predict serving the previous fit's trees
+        self._stacked = None                    # predict_device's lazy cache
+        if mesh is not None:
+            return self._fit_sharded(table, y, mesh, dist, level_callback)
         lo = self._loss = get_loss(self.loss)
         bins = jnp.asarray(table.bins)
         m = bins.shape[0]
@@ -298,7 +417,6 @@ class GradientBoostedTrees:
             top_n, other_n = self.goss.sample_sizes(m)
             amp = self.goss.amplification
         self.trees: list[Tree] = []
-        self._stacked = None                    # predict_device's lazy cache
         num_steps = max(1, self.config.max_depth)
         for _ in range(self.n_trees):
             g, h = lo.grad_hess(y, raw)
@@ -328,16 +446,76 @@ class GradientBoostedTrees:
         self.base = float(base)                 # one scalar sync at the end
         return self
 
+    def _fit_sharded(self, table: BinnedTable, y, mesh, dist,
+                     level_callback):
+        """The mesh-wide round loop: every per-round array — raw scores,
+        gradients/hessians, the leverage ranking, the GOSS draw, the build
+        weights and the score update — is a device Array sharded with
+        ``P(dist.data_axes)`` from the first round to the last.  The table
+        is staged ONCE (core.distributed.DistributedBuilder); each round's
+        sampling is the per-shard-quota draw with a scalar pmax threshold
+        merge (no cross-shard row gather, static shapes, deterministic
+        under the fit seed); each tree is built by the same sharded level
+        step as ``build_tree_distributed`` with the weights entering the
+        in-kernel channel shard-locally; and the full-data score update
+        walks the (data, model)-sharded bins feature-parallel
+        (``make_sharded_walk``).  Host traffic per round is only the
+        builder's level-loop scalars."""
+        from repro.core.distributed import (DistConfig, DistributedBuilder,
+                                            make_sharded_sampler,
+                                            make_sharded_walk)
+        if self.config.task != "regression_variance":
+            raise ValueError("the boosted-ensemble loop fits "
+                             "'regression_variance' trees; got task="
+                             f"{self.config.task!r}")
+        dist = dist if dist is not None else DistConfig()
+        lo = self._loss = get_loss(self.loss)
+        y_np = np.asarray(y, dtype=np.float32)
+        m = y_np.shape[0]
+        base = float(lo.base_score(jnp.asarray(y_np)))
+        builder = DistributedBuilder(table, self.config, mesh=mesh,
+                                     dist=dist)
+        y_d = builder._stage_rows(y_np, 0.0, np.float32)
+        raw = builder._stage_rows(np.full(builder.m_pad, base, np.float32),
+                                  0.0, np.float32)
+        q_top, q_oth = ((0, 0) if self.goss is None
+                        else self.goss.shard_quota(m, builder.d_shards))
+        sampler = make_sharded_sampler(mesh, dist, lo, self.goss, m,
+                                       q_top, q_oth)
+        num_steps = max(1, self.config.max_depth)
+        walk = make_sharded_walk(mesh, dist, num_steps)
+        lr = jnp.float32(self.learning_rate)
+        key = jax.random.PRNGKey(self.seed)
+        self.n_num = np.asarray(table.n_num)
+        self.trees: list[Tree] = []
+        for _ in range(self.n_trees):
+            key, sub = jax.random.split(key)
+            z, w, assign0 = sampler(y_d, raw, sub)
+            use_w = self.goss is not None or not lo.constant_hessian
+            tree = builder.build(z, sample_weight=w if use_w else None,
+                                 assign=assign0,
+                                 level_callback=level_callback)
+            self.trees.append(tree)
+            raw = walk(raw, {f: getattr(tree, f) for f in WALK_FIELDS},
+                       builder.bins_d, builder.n_num_d, lr)
+        self.base = base
+        return self
+
     def predict_device(self, bins) -> jax.Array:
         """Link-applied ensemble prediction as a device Array (no host
-        transfer).  The stacked [T, max_nodes] tree arrays are built once
-        on first use (trees are immutable after fit), so a serving loop
-        pays only the jitted walk + link per batch."""
+        transfer).  The stacked [T, max_nodes] tree arrays AND the device
+        copy of the feature mask ``n_num`` are built once on first use
+        (trees are immutable after fit; re-converting n_num per call was a
+        per-batch host->device transfer), so a serving loop pays only the
+        jitted walk + link per batch."""
         if getattr(self, "_stacked", None) is None:
-            self._stacked = {f: jnp.stack([getattr(t, f) for t in self.trees])
-                             for f in WALK_FIELDS}
+            self._stacked = (
+                {f: jnp.stack([getattr(t, f) for t in self.trees])
+                 for f in WALK_FIELDS},
+                jnp.asarray(self.n_num))
+        stacked, n_num_d = self._stacked
         raw = _ensemble_predict(
-            self._stacked, jnp.asarray(bins), jnp.asarray(self.n_num),
+            stacked, jnp.asarray(bins), n_num_d,
             jnp.float32(self.learning_rate), jnp.float32(self.base),
             num_steps=max(1, self.config.max_depth))
         return getattr(self, "_loss", get_loss(self.loss)).link(raw)

@@ -33,6 +33,10 @@ All three entry points take an optional ``weights`` [M] channel (GOSS's
 ``(1-a)/b`` amplification): rows accumulate ``w[i] * stats[i]``, applied
 in-kernel on the pallas backend.  ``weights=None`` traces the identical
 unweighted computation, preserving the bit-exactness contracts above.
+Under the distributed build the weight channel is shard-local — each data
+shard weights its own rows before the per-level collective — so the
+mesh-wide GOSS / Newton boosting loop (core.forest ``fit(mesh=...)``)
+adds ZERO collective bytes to the histogram reduction.
 """
 from __future__ import annotations
 

@@ -25,7 +25,11 @@ from repro.core.tree import Tree
 __all__ = ["predict_bins", "paths", "WALK_FIELDS"]
 
 # the Tree fields the Algorithm-7 walk reads; ensemble callers (core.forest)
-# stack exactly these per tree, so the set lives in ONE place
+# stack exactly these per tree, so the set lives in ONE place.  The
+# feature-sharded twin of _walk (core.distributed.make_sharded_walk — the
+# sharded boosting loop's score update, which cannot take_along_axis over
+# model-sharded bins) reads the same fields and must mirror the leaf /
+# left>=0 step gate below.
 WALK_FIELDS = ("feat", "op", "tbin", "label", "count", "left", "right",
                "leaf")
 

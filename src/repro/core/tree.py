@@ -202,7 +202,10 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
     pallas backend), so every count / label / purity statistic below is the
     GOSS-amplified unbiased estimate of its full-data value, and
     ``min_samples_split`` / ``min_samples_leaf`` bound the estimated
-    full-data counts.  Float-accumulated weighted counts are rounded to
+    full-data counts.  Under data parallelism the weights arrive sharded
+    like every other example row and multiply BEFORE the per-level
+    collective, so the sharded GOSS loop (core.distributed) weights for
+    free.  Float-accumulated weighted counts are rounded to
     the NEAREST int before the int32 node-count cast, so an estimate of
     2.9999997 does not spuriously trip ``min_samples_split=3`` (truncation
     was the old behaviour).  The smaller-child choice stays on RAW routed
@@ -422,6 +425,27 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
     return arrays, n_children, hist_out
 
 
+def _node_predicate(bins, f, op, tbin, n_num, model_axis):
+    """Per-example split-predicate evaluation, feature-parallel when the
+    bins are sharded over ``model_axis``: only the shard owning each
+    example's winning feature ``f`` evaluates, and one bit per example is
+    psum'd across the model axis (the paper-technique collective that the
+    dry-run measures).  The ONE copy of this logic — the level router
+    below and the sharded ensemble walk (core.distributed
+    .make_sharded_walk) both descend through it, so their routing
+    semantics cannot drift apart."""
+    if model_axis is None:
+        xb = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
+        return evaluate_predicate(xb, n_num[f], op, tbin)
+    k_local = bins.shape[1]
+    my = jax.lax.axis_index(model_axis)
+    mine = (f // k_local) == my
+    f_l = jnp.where(mine, f % k_local, 0)
+    xb = jnp.take_along_axis(bins, f_l[:, None], axis=1)[:, 0]
+    local = evaluate_predicate(xb, n_num[f_l], op, tbin) & mine
+    return jax.lax.psum(local.astype(jnp.int32), model_axis) > 0
+
+
 @functools.partial(jax.jit, static_argnames=("model_axis",))
 def _route_step(bins, assign, arrays, n_num, level_start, level_end, *,
                 model_axis=None):
@@ -429,23 +453,8 @@ def _route_step(bins, assign, arrays, n_num, level_start, level_end, *,
     left = arrays["left"][node]
     active = (node >= level_start) & (node < level_end) & (left >= 0)
     f = jnp.maximum(arrays["feat"][node], 0)
-    if model_axis is None:
-        xb = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
-        pos = evaluate_predicate(xb, n_num[f], arrays["op"][node],
-                                 arrays["tbin"][node])
-    else:
-        # feature-parallel routing: only the shard owning the winning
-        # feature evaluates the predicate; one bit per example is psum'd
-        # across the model axis (the paper-technique collective that the
-        # dry-run measures).
-        k_local = bins.shape[1]
-        my = jax.lax.axis_index(model_axis)
-        mine = (f // k_local) == my
-        f_l = jnp.where(mine, f % k_local, 0)
-        xb = jnp.take_along_axis(bins, f_l[:, None], axis=1)[:, 0]
-        local = evaluate_predicate(xb, n_num[f_l], arrays["op"][node],
-                                   arrays["tbin"][node]) & mine
-        pos = jax.lax.psum(local.astype(jnp.int32), model_axis) > 0
+    pos = _node_predicate(bins, f, arrays["op"][node], arrays["tbin"][node],
+                          n_num, model_axis)
     nxt = jnp.where(pos, left, arrays["right"][node])
     return jnp.where(active, nxt, node)
 
@@ -609,11 +618,15 @@ def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
     weighted — for GOSS, unbiased full-data — estimates;
     ``min_samples_split`` / ``min_samples_leaf`` then bound weighted counts
     (rounded to nearest) and ``min_child_weight`` floors the per-child
-    weight sum (= the hessian sum under Newton boosting).  Supported for "classification" (disables the
-    sibling-subtraction fast path: its bit-exactness contract does not
-    survive float weights) and "regression_variance" (subtraction stays on
-    under the float-tolerance contract); the label-split "regression" task
-    re-derives pseudo-classes per level and is unsupported."""
+    weight sum (= the hessian sum under Newton boosting).  Supported for
+    "classification" (disables the sibling-subtraction fast path: its
+    bit-exactness contract does not survive float weights) and
+    "regression_variance" (subtraction stays on under the float-tolerance
+    contract); the label-split "regression" task re-derives pseudo-classes
+    per level and is unsupported.  The mesh twin of this function is
+    ``core.distributed.DistributedBuilder.build`` / ``build_tree_
+    distributed``, which accepts the same ``sample_weight`` sharded over
+    the data axes."""
     if sample_weight is not None and config.task == "regression":
         raise ValueError("sample_weight is unsupported for the label-split "
                          "'regression' task (use 'regression_variance')")

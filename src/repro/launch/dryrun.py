@@ -140,8 +140,7 @@ def run_udt_cell(mesh_name, mesh, *, m_examples=1 << 20, k_feats=48,
            "mesh": mesh_name, "chips": mesh.devices.size}
     t0 = time.time()
     try:
-        step = make_sharded_step(mesh, dist, kw, m_examples, k_feats,
-                                 n_classes, 1 << 20, num_slots)
+        step = make_sharded_step(mesh, dist, kw, num_slots)
         sds = jax.ShapeDtypeStruct
         arrays = {k: sds((1 << 20,), jnp.int32)
                   for k in ("feat", "op", "tbin", "count", "depth", "left",

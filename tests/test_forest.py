@@ -48,6 +48,50 @@ def test_random_forest_stacked_predict_bit_identical():
     np.testing.assert_array_equal(rf.predict(tb), votes.argmax(axis=1))
 
 
+def test_gbt_predict_cache_and_refit_reset():
+    """predict_device builds its stacked-walk cache — INCLUDING the device
+    copy of n_num — once, and a refit drops it up front so stale trees can
+    never serve."""
+    import jax
+
+    cols, y = make_regression(900, 5, seed=11)
+    table = fit_bins(cols, max_num_bins=16)
+    gbt = GradientBoostedTrees(
+        n_trees=3, config=TreeConfig(max_depth=4,
+                                     task="regression_variance"))
+    gbt.fit(table, y)
+    assert gbt._stacked is None
+    p1 = gbt.predict(table.bins)
+    cache = gbt._stacked
+    stacked, n_num_d = cache
+    assert isinstance(n_num_d, jax.Array)          # converted once, cached
+    gbt.predict(table.bins)
+    assert gbt._stacked is cache                   # no per-call rebuild
+    # refit on shifted targets: the cache resets first and predictions move
+    gbt.fit(table, y + 100.0)
+    assert gbt._stacked is None
+    p2 = gbt.predict(table.bins)
+    assert abs(float(p2.mean()) - float(p1.mean()) - 100.0) < 5.0
+
+
+def test_rf_refit_resets_stacked_cache():
+    cols, y = make_classification(800, 5, 3, seed=3)
+    table = fit_bins(cols, max_num_bins=16)
+    rf = RandomForest(n_trees=3, config=TreeConfig(max_depth=6), seed=0)
+    rf.fit(table, y, n_classes=3)
+    rf.predict(table.bins)
+    cache = rf._stacked
+    rf.predict(table.bins)
+    assert rf._stacked is cache
+    rf.seed = 1
+    rf.fit(table, y, n_classes=3)                  # refit drops the cache
+    assert rf._stacked is None
+    fresh = RandomForest(n_trees=3, config=TreeConfig(max_depth=6), seed=1)
+    fresh.fit(table, y, n_classes=3)
+    np.testing.assert_array_equal(rf.predict(table.bins),
+                                  fresh.predict(table.bins))
+
+
 def test_gbt_reduces_residuals_monotonically():
     cols, y = make_regression(1500, 6, seed=7)
     (tr_c, tr_y), _, (te_c, te_y) = train_val_test_split(cols, y)
