@@ -1,0 +1,234 @@
+"""Forest-serving benchmark: bucketed multi-tenant inference end to end.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve_forest [--smoke | --gate]
+
+Mirrors examples/serve_batched.py's prefill/steady-state split for the
+tree stack: the "prefill" analogue is the cold pass — tenant
+registration + the one AOT compile per (bucket, model-set) the request
+stream touches — and steady state is the same deterministic stream
+replayed against the warm compile cache, reporting p50/p99 per-request
+latency and requests/s / rows/s.  Wall-clock numbers are recorded for
+the cross-PR trajectory but NOT gated (CPU CI noise; the hardware-runner
+wall-clock gate is a ROADMAP carried item).
+
+What the blocking ``serve-gate`` holds instead is everything
+deterministic about the serving layer:
+
+  * **routing parity** — every tenant's routed predictions over the
+    mixed-bucket stream are bit-identical to its own ``predict_device``
+    (max |diff| must be exactly 0);
+  * **byte accounting** — the packed node-table bytes per request
+    (registry.request_cost, a pure function of shapes and dtypes) must
+    be <= 0.5x the f32/i32 stacked layout, and must not regress
+    materially above the committed BENCH_serve.json baseline
+    (no-self-ratchet: the gate writes its own report to a throwaway
+    path, same rule as every other gate);
+  * **compile count** — exactly one compile per (bucket, model-set)
+    shape: after the cold pass the executable count equals the number of
+    buckets the stream touched, and the steady-state replay adds ZERO
+    compiles (the jit cache-hit assertion).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import GradientBoostedTrees, TreeConfig, fit_bins, transform
+from repro.data import (make_classification, make_regression,
+                        train_val_test_split)
+from repro.serve import BatchPolicy, ForestServer, ModelRegistry
+
+# the one definition of the CI smoke-gate shapes (benchmarks/run.py --smoke
+# and the --gate mode both use it, so artifacts stay comparable)
+SMOKE = dict(m=3_000, k=6, n_bins=32, n_requests=60, seed=0,
+             buckets=(1, 8, 64, 512),
+             tenants=(dict(loss="squared", n_trees=8, max_depth=4),
+                      dict(loss="logistic", n_trees=12, max_depth=5),
+                      dict(loss="squared", n_trees=6, max_depth=6)))
+
+RATIO_CEIL = 0.5       # packed/f32 node-table bytes per request (ISSUE 6)
+BASELINE_SLACK = 1.05  # tolerated growth over the committed baseline ratio
+
+
+def _train_tenants(m, k, n_bins, tenants, seed):
+    """Fit the tenant ensembles on per-tenant synthetic tasks; returns
+    (fitted list, validation bins list)."""
+    fitted, val = [], []
+    for i, t in enumerate(tenants):
+        s = seed + i
+        if t["loss"] == "logistic":
+            cols, y = make_classification(m, k, 2, seed=s)
+        else:
+            cols, y = make_regression(m, k, seed=s)
+        (tr_c, tr_y), (va_c, _), _ = train_val_test_split(cols, y, seed=s)
+        table = fit_bins(tr_c, max_num_bins=n_bins)
+        gbt = GradientBoostedTrees(
+            n_trees=t["n_trees"], loss=t["loss"], seed=s,
+            config=TreeConfig(max_depth=t["max_depth"],
+                              task="regression_variance"))
+        gbt.fit(table, tr_y.astype(np.float32))
+        fitted.append(gbt)
+        val.append(transform(va_c, table))
+    return fitted, val
+
+
+def _request_stream(val, n_requests, buckets, seed):
+    """Deterministic mixed-size, mixed-tenant stream: sizes cycle through
+    the bucket envelope (1 under, at, and over each bucket edge plus one
+    oversize split), tenants round-robin."""
+    rng = np.random.default_rng(seed)
+    sizes = []
+    for b in buckets:
+        sizes += [max(1, b - 1), b, b + 1]
+    sizes += [buckets[-1] + 7]          # forces the oversize chunk split
+    reqs = []
+    for i in range(n_requests):
+        mid = i % len(val)
+        n = sizes[i % len(sizes)]
+        rows = val[mid][rng.integers(0, val[mid].shape[0], size=n)]
+        reqs.append((mid, rows))
+    return reqs
+
+
+def run(m=20_000, k=10, n_bins=64, n_requests=200, seed=0,
+        buckets=(1, 8, 64, 512),
+        tenants=SMOKE["tenants"], out="BENCH_serve.json"):
+    fitted, val = _train_tenants(m, k, n_bins, tenants, seed)
+
+    t0 = time.time()
+    registry = ModelRegistry(capacity=len(fitted))
+    mids = [registry.add(f"tenant{i}", g) for i, g in enumerate(fitted)]
+    server = ForestServer(registry, BatchPolicy(buckets=tuple(buckets)))
+    stream = _request_stream(val, n_requests, tuple(buckets), seed)
+    for mid, rows in stream:            # cold pass: compiles per bucket
+        server.predict(mid, rows)
+    wall_cold = time.time() - t0
+    compiles_cold = server.compile_count
+
+    lat = []
+    t0 = time.time()
+    for mid, rows in stream:            # steady state: warm cache
+        t1 = time.perf_counter()
+        server.predict(mid, rows)
+        lat.append(time.perf_counter() - t1)
+    wall_steady = time.time() - t0
+    compiles_steady = server.compile_count - compiles_cold
+    n_rows = sum(r.shape[0] for _, r in stream)
+
+    # deterministic routing parity: the whole validation set per tenant,
+    # through the bucketed server, vs the tenant's own fat-table walk
+    parity = 0.0
+    for gbt, vb, mid in zip(fitted, val, mids):
+        got = server.predict(mid, vb)
+        want = np.asarray(gbt.predict_device(vb))
+        if not np.array_equal(want, got):
+            parity = max(parity, float(np.abs(want - got).max()))
+
+    cost = registry.request_cost()
+    report = dict(
+        config=dict(m=m, k=k, n_bins=n_bins, n_requests=n_requests,
+                    seed=seed, buckets=list(buckets),
+                    tenants=[dict(t) for t in tenants]),
+        n_tenants=len(fitted),
+        shape_sig=list(map(str, registry.shape_sig)),
+        record_bytes=cost["record_bytes"],
+        node_bytes_packed=cost["node_bytes_packed"],
+        node_bytes_f32=cost["node_bytes_f32"],
+        byte_ratio=cost["ratio"],
+        flops_per_request_row=cost["flops"],
+        compiles_cold=compiles_cold, compiles_steady=compiles_steady,
+        buckets_used=sorted({b for b, _ in server._exec}),
+        parity_max_abs_diff=parity,
+        p50_ms=round(float(np.percentile(lat, 50)) * 1e3, 3),
+        p99_ms=round(float(np.percentile(lat, 99)) * 1e3, 3),
+        requests_s=round(n_requests / wall_steady, 1),
+        rows_s=round(n_rows / wall_steady, 1),
+        wall_cold_s=round(wall_cold, 2),
+        wall_steady_s=round(wall_steady, 2),
+    )
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print("serve,metric,value")
+    print(f"serve,byte_ratio,{report['byte_ratio']}")
+    print(f"serve,compiles_cold,{compiles_cold}")
+    print(f"serve,compiles_steady,{compiles_steady}")
+    print(f"serve,parity_max_abs_diff,{parity}")
+    print(f"serve,p50_ms,{report['p50_ms']}")
+    print(f"serve,p99_ms,{report['p99_ms']}")
+    print(f"serve,requests_s,{report['requests_s']}")
+    print(f"serve_total,{len(fitted)} tenants, packed "
+          f"{cost['node_bytes_packed']}B vs f32 {cost['node_bytes_f32']}B "
+          f"per request ({report['byte_ratio']}x), {compiles_cold} compiles "
+          f"cold / {compiles_steady} steady, p50 {report['p50_ms']}ms p99 "
+          f"{report['p99_ms']}ms, {report['requests_s']} req/s "
+          f"({report['rows_s']} rows/s), -> {out}")
+    return report
+
+
+def gate(baseline_path="BENCH_serve.json"):
+    """Blocking CI gate (see module docstring for the contract)."""
+    baseline = None
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    report = run(**SMOKE, out=os.path.join(
+        tempfile.gettempdir(), "BENCH_serve_gate.json"))
+    lines, ok = [], True
+
+    parity_ok = report["parity_max_abs_diff"] == 0.0
+    ok &= parity_ok
+    lines.append(f"serve-gate: routed-vs-predict_device max |diff| "
+                 f"{report['parity_max_abs_diff']} (require exactly 0) -> "
+                 f"{'OK' if parity_ok else 'FAIL'}")
+
+    ratio_ok = report["byte_ratio"] <= RATIO_CEIL
+    ok &= ratio_ok
+    lines.append(f"serve-gate: packed/f32 node bytes per request "
+                 f"{report['byte_ratio']} (ceiling {RATIO_CEIL}) -> "
+                 f"{'OK' if ratio_ok else 'FAIL'}")
+
+    want_compiles = len(report["buckets_used"])
+    cc_ok = (report["compiles_cold"] == want_compiles
+             and report["compiles_steady"] == 0)
+    ok &= cc_ok
+    lines.append(f"serve-gate: {report['compiles_cold']} compiles cold over "
+                 f"buckets {report['buckets_used']} (require "
+                 f"{want_compiles}: one per (bucket, model-set)), "
+                 f"{report['compiles_steady']} steady (require 0: jit "
+                 f"cache-hit) -> {'OK' if cc_ok else 'FAIL'}")
+
+    if baseline is None:
+        lines.append(f"serve-gate: no baseline at {baseline_path} "
+                     "(floor checks only)")
+    elif baseline.get("config") != report["config"]:
+        lines.append("serve-gate: baseline config differs "
+                     "(floor checks only)")
+    else:
+        want = round(BASELINE_SLACK * baseline["byte_ratio"], 4)
+        rel_ok = report["byte_ratio"] <= want
+        ok &= rel_ok
+        lines.append(f"serve-gate: baseline byte_ratio "
+                     f"{baseline['byte_ratio']}, require <= {want} -> "
+                     f"{'OK' if rel_ok else 'FAIL'}")
+    print("\n".join(lines))
+    return 0 if ok else 1
+
+
+def main():
+    if "--gate" in sys.argv:
+        sys.exit(gate())
+    if "--smoke" in sys.argv:
+        return run(**SMOKE)
+    return run()
+
+
+if __name__ == "__main__":
+    main()

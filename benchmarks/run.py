@@ -17,7 +17,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import bench_selection, bench_udt_cls, bench_udt_reg
 from benchmarks import (bench_dist_goss, bench_goss, bench_kernels,
-                        bench_logistic, bench_subtraction)
+                        bench_logistic, bench_serve_forest,
+                        bench_subtraction)
 
 
 def main() -> None:
@@ -81,6 +82,14 @@ def main() -> None:
         bench_dist_goss.run()
     else:   # reduced-scale default
         bench_dist_goss.run(m=8_000, k=8, n_trees=8, max_depth=6)
+
+    print("# multi-tenant forest serving (writes BENCH_serve.json)")
+    if smoke:
+        bench_serve_forest.run(**bench_serve_forest.SMOKE)
+    elif full:
+        bench_serve_forest.run()
+    else:   # reduced-scale default
+        bench_serve_forest.run(m=8_000, k=8, n_requests=100)
 
     if not smoke:
         print("# kernel micro-bench")

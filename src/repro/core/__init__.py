@@ -19,7 +19,7 @@ from repro.core.split import (  # noqa: F401
     best_splits, evaluate_predicate, SplitDecision, OP_LE, OP_GT, OP_EQ,
 )
 from repro.core.tree import Tree, TreeConfig, build_tree, BuildState  # noqa: F401
-from repro.core.predict import predict_bins, paths  # noqa: F401
+from repro.core.predict import predict_bins, paths, stack_trees  # noqa: F401
 from repro.core.tuning import tune, toot_grid, prune_stats, TuneResult  # noqa: F401
 from repro.core.forest import (  # noqa: F401
     GossConfig, GradientBoostedTrees, RandomForest,

@@ -79,6 +79,18 @@ __all__ = ["DistConfig", "DistributedBuilder", "build_tree_distributed",
 
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
+    """Mesh layout for the distributed build and the sharded boosting loop.
+
+    ``data_axes`` names the mesh axes examples are sharded over (rows of
+    the [M, K] binned table, targets, weights, assignments — everything
+    ``P(data_axes)``); ``model_axis`` names the feature-sharding axis, or
+    ``None`` for data-parallel only.  Passed to
+    ``GradientBoostedTrees.fit(mesh=..., dist=DistConfig(...))`` and to
+    ``build_tree_distributed`` / ``DistributedBuilder``; the axis names
+    must exist in the mesh.  The compiled level step is cached per
+    (mesh, DistConfig, static kwargs) — see ``_STEP_CACHE`` — so one
+    DistConfig instance reused across an ensemble compiles once.
+    """
     data_axes: tuple = ("data",)       # example-sharding mesh axes
     model_axis: str | None = "model"   # feature-sharding mesh axis (or None)
     # Two COMPOSABLE ways to shrink the per-level histogram collective:

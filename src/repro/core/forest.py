@@ -68,7 +68,7 @@ import numpy as np
 
 from repro.core.binning import BinnedTable
 from repro.core.losses import get_loss
-from repro.core.predict import WALK_FIELDS, _walk, predict_bins
+from repro.core.predict import WALK_FIELDS, _walk, predict_bins, stack_trees
 from repro.core.tree import Tree, TreeConfig, build_tree
 
 __all__ = ["RandomForest", "GradientBoostedTrees", "GossConfig",
@@ -147,8 +147,7 @@ class RandomForest:
         built once on first use (trees are immutable after fit)."""
         if getattr(self, "_stacked", None) is None:
             self._stacked = (
-                {f: jnp.stack([getattr(t, f) for t in self.trees])
-                 for f in WALK_FIELDS},
+                stack_trees(self.trees),
                 jnp.stack([jnp.asarray(nn) for nn in self.n_nums]),
                 max(1, max(t.max_tree_depth for t in self.trees)))
         stacked, n_nums, steps = self._stacked
@@ -509,10 +508,7 @@ class GradientBoostedTrees:
         per-batch host->device transfer), so a serving loop pays only the
         jitted walk + link per batch."""
         if getattr(self, "_stacked", None) is None:
-            self._stacked = (
-                {f: jnp.stack([getattr(t, f) for t in self.trees])
-                 for f in WALK_FIELDS},
-                jnp.asarray(self.n_num))
+            self._stacked = (stack_trees(self.trees), jnp.asarray(self.n_num))
         stacked, n_num_d = self._stacked
         raw = _ensemble_predict(
             stacked, jnp.asarray(bins), n_num_d,
@@ -525,3 +521,28 @@ class GradientBoostedTrees:
         whole forest (the per-tree transfer loop was the old hot spot).
         Returns link-applied values: P(y=1) for the logistic loss."""
         return np.asarray(self.predict_device(bins))
+
+    def export_stacked(self):
+        """Export the fitted ensemble for the serving layer (repro.serve).
+
+        Returns ``(tables, n_num, meta)``:
+
+          * ``tables`` — the stacked ``[T, max_nodes]`` WALK_FIELDS node
+            arrays (core.predict.stack_trees — the exact arrays
+            ``predict_device`` walks),
+          * ``n_num`` — the ``[K]`` numeric-bin-count feature mask,
+          * ``meta`` — the serving scalars: ``learning_rate``, ``base``
+            (the raw base score F0), ``link_id`` (core.losses serving ABI:
+            0 identity / 1 sigmoid), ``num_steps`` (the static walk bound
+            ``max(1, config.max_depth)`` that ``predict_device`` uses) and
+            ``loss`` (the loss name, informational).
+
+        The serve layer packs these tables into the narrow int8/int16
+        node-record layout (serve.pack) and concatenates tenants along a
+        model axis (serve.registry); routed serving predictions are
+        bit-identical to ``predict_device`` on the same rows (tested)."""
+        lo = get_loss(self.loss)
+        return (stack_trees(self.trees), np.asarray(self.n_num),
+                dict(learning_rate=float(self.learning_rate),
+                     base=float(self.base), link_id=int(lo.link_id),
+                     num_steps=max(1, self.config.max_depth), loss=lo.name))

@@ -36,6 +36,16 @@ float-tolerance contract of core.tree._subtract_eligible.  Losses with
 ``constant_hessian`` (squared error, h = 1) skip the weight channel
 entirely when unsampled, so the pre-existing squared-loss path traces —
 and fits — bit-identically to before the refactor.
+
+Serving
+-------
+Each loss also carries an integer ``link_id`` (0 = identity, 1 = sigmoid).
+The multi-tenant serving layer (repro.serve.registry) cannot call a
+per-model Python ``link`` inside one jitted batch that mixes tenants, so
+it gathers ``link_id`` per request and selects the link branch-free; the
+ids are part of the serving ABI and must stay stable.  ``predict_device``
+keeps using the ``link`` method directly — the two paths are verified
+bit-identical by the serve parity tests.
 """
 from __future__ import annotations
 
@@ -57,6 +67,7 @@ class SquaredLoss:
     """
     name = "squared"
     constant_hessian = True
+    link_id = 0                  # identity (serving ABI, see module docs)
 
     def base_score(self, y: jax.Array) -> jax.Array:
         return jnp.mean(y)
@@ -86,6 +97,7 @@ class LogisticLoss:
     eps: float = 1e-6
     name = "logistic"
     constant_hessian = False
+    link_id = 1                  # sigmoid (serving ABI, see module docs)
 
     def base_score(self, y: jax.Array) -> jax.Array:
         p = jnp.clip(jnp.mean(y), self.eps, 1.0 - self.eps)

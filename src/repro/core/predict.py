@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.core.split import evaluate_predicate
 from repro.core.tree import Tree
 
-__all__ = ["predict_bins", "paths", "WALK_FIELDS"]
+__all__ = ["predict_bins", "paths", "stack_trees", "WALK_FIELDS"]
 
 # the Tree fields the Algorithm-7 walk reads; ensemble callers (core.forest)
 # stack exactly these per tree, so the set lives in ONE place.  The
@@ -32,6 +32,38 @@ __all__ = ["predict_bins", "paths", "WALK_FIELDS"]
 # left>=0 step gate below.
 WALK_FIELDS = ("feat", "op", "tbin", "label", "count", "left", "right",
                "leaf")
+
+# fill values that make a padding node slot inert under the walk: a leaf
+# sentinel (left = -1 stops the descent) with label 0.  stack_trees pads
+# with these when trees of one ensemble disagree on max_nodes, and the
+# serve layer (repro.serve) uses the same fills for its padded model /
+# tree axes — ONE definition so a padded slot can never route or score.
+_PAD_FILLS = dict(feat=-1, op=-1, tbin=-1, label=0.0, count=0, left=-1,
+                  right=-1, leaf=False)
+
+
+def stack_trees(trees) -> dict:
+    """Stack per-tree WALK_FIELDS into ``[T, max_nodes]`` device arrays.
+
+    The single source of the stacked node-table layout: ensemble prediction
+    (core.forest's RandomForest / GradientBoostedTrees ``predict_device``)
+    and the serving layer (repro.serve — packing, the multi-tenant
+    registry) all build their tables through this function, so the field
+    set and the padding semantics cannot drift between them.  Trees with
+    fewer node slots than the widest tree are padded with inert leaf slots
+    (``_PAD_FILLS``); padded slots are unreachable from the root so they
+    never affect a walk."""
+    width = max(t.feat.shape[0] for t in trees)
+
+    def pad(a, fill):
+        n = a.shape[0]
+        if n == width:
+            return jnp.asarray(a)
+        return jnp.concatenate(
+            [jnp.asarray(a), jnp.full((width - n,), fill, a.dtype)])
+
+    return {f: jnp.stack([pad(getattr(t, f), _PAD_FILLS[f]) for t in trees])
+            for f in WALK_FIELDS}
 
 
 def _descend(tree_arrays, bins, n_num, node):

@@ -1,10 +1,22 @@
 """Batched serving driver.
 
+LM mode (template scaffolding):
+
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --batch 4 --prompt-len 16 --gen 32
 
 Initialises a model, prefills a batch of prompts, then decodes with the
 single-token serve step (the same step the decode_* dry-run cells lower).
+
+Forest mode (the tree reproduction's serving path, docs/serving.md):
+
+    PYTHONPATH=src python -m repro.launch.serve --forest \
+        --tenants 3 --requests 50
+
+Trains ``--tenants`` tiny synthetic ensembles, registers them in one
+ModelRegistry, and drives a mixed request stream through the bucketed
+ForestServer, printing per-request latency, the compile count, and the
+packed-vs-f32 byte accounting.
 """
 from __future__ import annotations
 
@@ -21,6 +33,52 @@ from repro.models.sharding import set_activation_axes
 from repro.serve import generate
 
 
+def serve_forest(args):
+    """--forest mode: multi-tenant bucketed tree serving on synthetic data."""
+    import numpy as np
+
+    from repro.core import (GradientBoostedTrees, TreeConfig, fit_bins,
+                            transform)
+    from repro.data import make_regression, train_val_test_split
+    from repro.serve import BatchPolicy, ForestServer, ModelRegistry
+
+    registry = ModelRegistry(capacity=max(4, args.tenants))
+    val = []
+    for i in range(args.tenants):
+        cols, y = make_regression(2_000, 6, seed=i)
+        (tr_c, tr_y), (va_c, _), _ = train_val_test_split(cols, y, seed=i)
+        table = fit_bins(tr_c, max_num_bins=32)
+        gbt = GradientBoostedTrees(
+            n_trees=8, loss="squared", seed=i,
+            config=TreeConfig(max_depth=4, task="regression_variance"))
+        gbt.fit(table, tr_y.astype(np.float32))
+        registry.add(f"tenant{i}", gbt)
+        val.append(transform(va_c, table))
+
+    server = ForestServer(registry, BatchPolicy())
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    lat = []
+    for r in range(args.requests):
+        mid = r % args.tenants
+        n = int(rng.integers(1, 65))
+        rows = val[mid][rng.integers(0, val[mid].shape[0], size=n)]
+        t1 = time.time()
+        server.predict(mid, rows)
+        lat.append(time.time() - t1)
+    dt = time.time() - t0
+    cost = registry.request_cost()
+    print(f"{args.tenants} tenants, {args.requests} requests in {dt:.2f}s "
+          f"({args.requests/dt:.1f} req/s incl. compile)")
+    print(f"p50 {np.percentile(lat, 50)*1e3:.2f}ms "
+          f"p99 {np.percentile(lat, 99)*1e3:.2f}ms, "
+          f"{server.compile_count} compiles over buckets "
+          f"{sorted({b for b, _ in server._exec})}")
+    print(f"packed {cost['node_bytes_packed']}B vs f32 "
+          f"{cost['node_bytes_f32']}B node bytes/request "
+          f"({cost['ratio']}x)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -30,7 +88,15 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--mesh", default="local", choices=["local", "prod"])
+    ap.add_argument("--forest", action="store_true",
+                    help="serve tree ensembles instead of the LM stack")
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=50)
     args = ap.parse_args()
+
+    if args.forest:
+        serve_forest(args)
+        return
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get(args.arch))

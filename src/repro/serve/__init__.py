@@ -1,1 +1,22 @@
+"""Serving layer.
+
+Two independent serving stacks live here:
+
+  * **Forest serving** (the tree reproduction's production path):
+    ``pack`` — int8/int16 packed node tables, ``registry`` — the
+    multi-tenant gather-routed model registry, ``batching`` — the
+    bucketed micro-batch server.  See docs/serving.md.
+  * **LM serving** (``serve.serve`` — template scaffolding): prefill +
+    single-token decode for the models/ transformer stack, driven by
+    examples/serve_batched.py and launch/serve.py.
+"""
 from repro.serve.serve import make_serve_step, prefill, generate  # noqa: F401
+from repro.serve.pack import (  # noqa: F401
+    PackedForest, pack_trees, pack_stacked, unpack, walk_bytes_per_request,
+)
+from repro.serve.registry import (  # noqa: F401
+    ModelRegistry, Tenant, routed_forest_walk,
+)
+from repro.serve.batching import (  # noqa: F401
+    BatchPolicy, ForestServer, PendingRequest,
+)

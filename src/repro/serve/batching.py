@@ -1,0 +1,218 @@
+"""Request micro-batching: padding-to-bucket shapes, one compile each.
+
+jit'd XLA executables are shape-specialised, so a naive server compiles
+once per distinct request size — an unbounded compile set under real
+traffic.  This server instead pads every batch to one of a small static
+set of **buckets** (default 1/8/64/512 rows) and compiles **exactly one
+executable per (bucket, model-set shape)** — the compile set is bounded
+by ``len(buckets)`` per registry envelope, enforced by construction: the
+executables live in an explicit AOT cache (``jax.jit(...).lower(...)
+.compile()``) keyed on ``(bucket, registry.shape_sig)``, and
+``compile_count`` counts exactly the cache misses.  The serve-gate
+asserts both the count and the cache-hit behaviour (a second pass over
+the same traffic adds zero compiles).
+
+The batch's input buffer is **donated** (``donate_argnums``): at steady
+state the padded [bucket, K] bin buffer is freshly built per flush and
+XLA may reuse its memory for the output (a no-op on CPU CI, where XLA
+ignores donation — the resulting warning is suppressed; real on TPU).
+
+Batching policy: requests queue in arrival order (tenants freely mixed —
+routing is the registry's job) and flush when either ``max_batch`` rows
+are pending or the oldest request has waited ``max_delay`` seconds
+(``tick``).  A flush concatenates the queue, splits it into chunks of at
+most the largest bucket — a request larger than the largest bucket
+therefore just spans several chunks — and pads each chunk up to the
+smallest bucket that holds it.  Padding rows carry model id 0 and
+all-zero bins; they are computed and then **sliced away**, and because
+every per-row operation in the walk is independent (gathers and
+elementwise math, no cross-row reduction), the surviving rows are
+bit-identical to an unpadded evaluation — the padding can never leak
+into real outputs (tested).
+
+The server is single-threaded and cooperative (``submit`` / ``tick`` /
+``flush``); timestamps can be injected for deterministic tests.  An async
+front-end is a transport concern layered on top, not part of this PR.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.registry import ModelRegistry, routed_forest_walk
+
+__all__ = ["BatchPolicy", "ForestServer", "PendingRequest"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """Bucket + flush policy.  ``buckets`` must be ascending; the largest
+    bucket is the chunk size cap.  ``max_delay`` (seconds) bounds the
+    queueing latency of a lone request; ``max_batch`` rows force a flush
+    regardless of age."""
+    buckets: tuple = (1, 8, 64, 512)
+    max_delay: float = 0.002
+    max_batch: int = 512
+
+    def __post_init__(self):
+        if not self.buckets or list(self.buckets) != sorted(set(self.buckets)):
+            raise ValueError(f"buckets must be ascending: {self.buckets}")
+
+
+class PendingRequest:
+    """Handle returned by ``submit``; ``result()`` forces a flush."""
+
+    def __init__(self, server: "ForestServer", n_rows: int):
+        self._server = server
+        self.n_rows = n_rows
+        self._out: np.ndarray | None = None
+
+    def done(self) -> bool:
+        return self._out is not None
+
+    def _set(self, out: np.ndarray):
+        self._out = out
+
+    def result(self) -> np.ndarray:
+        if self._out is None:
+            self._server.flush()
+        return self._out
+
+
+class ForestServer:
+    """Bucketed micro-batch server over a ``ModelRegistry``.
+
+    ``predict`` is the synchronous one-shot path (used by the latency
+    benchmark); ``submit`` / ``tick`` / ``flush`` is the queued path.
+    ``compile_count`` is the number of AOT executables built so far —
+    the (bucket, model-set) compile contract made measurable."""
+
+    def __init__(self, registry: ModelRegistry,
+                 policy: BatchPolicy | None = None):
+        self.registry = registry
+        self.policy = policy or BatchPolicy()
+        self._exec: dict = {}          # (bucket, shape_sig) -> compiled
+        self.compile_count = 0
+        self.stats = dict(batches=0, rows=0, padded_rows=0, requests=0)
+        self._queue: list = []         # (gids [n], rows [n,K], pending, t)
+
+    # -- bucket selection --------------------------------------------------
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket >= n.  Callers chunk to the largest bucket
+        first, so n <= max(buckets) here."""
+        for b in self.policy.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"chunk of {n} rows exceeds largest bucket "
+                         f"{self.policy.buckets[-1]}")
+
+    # -- compile cache -----------------------------------------------------
+
+    def _get_exec(self, bucket: int):
+        key = (bucket, self.registry.shape_sig)
+        compiled = self._exec.get(key)
+        if compiled is None:
+            steps = self.registry.num_steps
+            k_cap = self.registry.tables["n_num"].shape[1]
+
+            def serve_fn(tables, bins, gids):
+                return routed_forest_walk(tables, bins, gids,
+                                          num_steps=steps)
+
+            with warnings.catch_warnings():
+                # CPU ignores buffer donation and warns at lowering time;
+                # donation is for the accelerator path.
+                warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+                compiled = (
+                    jax.jit(serve_fn, donate_argnums=(1,))
+                    .lower(self.registry.tables,
+                           jax.ShapeDtypeStruct((bucket, k_cap), jnp.int32),
+                           jax.ShapeDtypeStruct((bucket,), jnp.int32))
+                    .compile())
+            self._exec[key] = compiled
+            self.compile_count += 1
+        return compiled
+
+    def _execute(self, gids: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        """Run one chunk: pad to its bucket, execute, slice the pad away."""
+        n = rows.shape[0]
+        bucket = self.bucket_for(n)
+        if n < bucket:
+            rows = np.pad(rows, ((0, bucket - n), (0, 0)))
+            gids = np.pad(gids, (0, bucket - n))
+        compiled = self._get_exec(bucket)
+        with warnings.catch_warnings():
+            # CPU ignores buffer donation and warns; donation is for the
+            # accelerator path, the warning is expected noise under CI.
+            warnings.filterwarnings("ignore",
+                                    message=".*[Dd]onat.*")
+            out = compiled(self.registry.tables,
+                           jnp.asarray(rows, dtype=jnp.int32),
+                           jnp.asarray(gids, dtype=jnp.int32))
+        self.stats["batches"] += 1
+        self.stats["rows"] += n
+        self.stats["padded_rows"] += bucket - n
+        return np.asarray(out)[:n]
+
+    def _run(self, gids: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        """Chunk a (possibly oversize) row block through the buckets."""
+        cap = self.policy.buckets[-1]
+        outs = []
+        for i in range(0, rows.shape[0], cap):
+            outs.append(self._execute(gids[i:i + cap], rows[i:i + cap]))
+        return np.concatenate(outs) if outs else np.zeros((0,), np.float32)
+
+    # -- queued serving ----------------------------------------------------
+
+    def submit(self, model_id: int, bins, now: float | None = None
+               ) -> PendingRequest:
+        """Queue one request (``bins`` [n, k_model]); flushes immediately
+        once ``max_batch`` rows are pending.  ``now`` injects a timestamp
+        for deterministic tests (defaults to ``time.monotonic()``)."""
+        if not 0 <= model_id < len(self.registry.tenants):
+            raise ValueError(f"unknown model_id {model_id}")
+        rows = self.registry.pad_bins(bins)
+        pending = PendingRequest(self, rows.shape[0])
+        gids = np.full((rows.shape[0],), model_id, dtype=np.int32)
+        self._queue.append(
+            (gids, rows, pending,
+             time.monotonic() if now is None else now))
+        self.stats["requests"] += 1
+        if sum(q[0].shape[0] for q in self._queue) >= self.policy.max_batch:
+            self.flush()
+        return pending
+
+    def tick(self, now: float | None = None):
+        """Flush if the oldest queued request has aged past max_delay."""
+        if not self._queue:
+            return
+        now = time.monotonic() if now is None else now
+        if now - self._queue[0][3] >= self.policy.max_delay:
+            self.flush()
+
+    def flush(self):
+        """Drain the queue: one concatenated mixed-tenant batch, chunked
+        and padded to buckets, outputs sliced back per request."""
+        if not self._queue:
+            return
+        batch, self._queue = self._queue, []
+        gids = np.concatenate([q[0] for q in batch])
+        rows = np.concatenate([q[1] for q in batch])
+        out = self._run(gids, rows)
+        ofs = 0
+        for _, r, pending, _ in batch:
+            pending._set(out[ofs:ofs + r.shape[0]])
+            ofs += r.shape[0]
+
+    def predict(self, model_id: int, bins) -> np.ndarray:
+        """Synchronous one-shot: enqueue, flush, return (the benchmark's
+        steady-state hot path)."""
+        pending = self.submit(model_id, bins)
+        self.flush()
+        return pending.result()

@@ -1,0 +1,190 @@
+"""Packed node tables: the serving-side int8/int16 tree layout.
+
+The training-side node table (core.predict.WALK_FIELDS) is eight f32/i32
+arrays — 32 bytes per node — because the builder and the runtime-tuning
+walk (predict_bins) need scores, counts, depths and both child pointers.
+Serving needs none of that: the serve walk runs with no depth limit and
+``min_samples_split = 0`` (the fitted tree IS the model), so per step it
+only reads *which feature to test, how to test it, and where the left
+child lives*.  This module packs exactly that into a narrow per-node
+record so thousands of trees fit in tile-sized (VMEM-friendly) blocks:
+
+    field   meaning                              width
+    -----   -----------------------------------  ---------------------
+    feat    split feature id, -1 for leaves      int8 if K - 1 <= 127,
+                                                 else int16 (int32 for
+                                                 pathological K)
+    op      predicate op {LE, GT, EQ}, -1 leaf   int8 (always fits)
+    tbin    threshold / category bin             int8 if max bin <= 127,
+                                                 else int16
+    loff    left-child offset ``left - node``,   int8 / int16 / int32 by
+            -1 for leaves                        the same overflow rule
+    label   leaf value (f32, bit-preserved)      float32
+
+``right`` needs no storage: the level-synchronous builder allocates
+children in sibling pairs, so ``right == left + 1`` always (asserted at
+pack time).  ``leaf`` needs no storage either: a leaf is exactly
+``loff < 0`` (the builder writes ``left = -1`` on every leaf, and a
+non-leaf always has ``left >= 0``), which is the same gate the training
+walk reduces to at serve-time hyper-parameters.  ``count`` / ``score`` /
+``depth`` / ``parent`` are dropped outright — runtime TOOT pruning
+(predict_bins) keeps using the fat table; serving never consults them.
+
+Width selection is per-ensemble and per-field: int8 while every value
+(including the -1 sentinel) fits in [-128, 127], otherwise int16,
+otherwise int32 — "int8 overflows force int16" (deep trees with wide
+levels can push ``loff`` past int16; the packer then falls back to int32
+for that one field rather than refusing).  At the default widths a node
+record is 4 bytes of structure + 4 bytes of label vs 32 bytes for the
+f32/i32 table — the byte accounting below is what the serve-gate holds
+at <= 0.5x.
+
+``unpack`` is the lossless inverse (the kernels/ref.py-style parity
+oracle): it reconstructs ``feat/op/tbin/left/right/leaf/label`` exactly,
+and tests/test_serve_forest.py asserts the round trip bit-for-bit on
+every valid node.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.predict import WALK_FIELDS
+
+__all__ = ["PackedForest", "pack_trees", "pack_stacked", "unpack",
+           "walk_bytes_per_request", "FAT_STEP_BYTES", "LABEL_BYTES"]
+
+# Per-(step, tree) bytes the f32/i32 stacked walk (core.predict._walk)
+# touches: leaf, left, count, feat, op, tbin — six 4-byte fields.  The
+# label read (4 bytes per tree, once) is counted separately.  This is the
+# float32-stacked baseline of the serve-gate's byte-accounting ratio.
+FAT_STEP_BYTES = 6 * 4
+LABEL_BYTES = 4
+
+
+def _narrowest(a: np.ndarray) -> np.ndarray:
+    """Smallest of int8/int16/int32 that holds every value of ``a``."""
+    for dt in (np.int8, np.int16, np.int32):
+        info = np.iinfo(dt)
+        if a.min() >= info.min and a.max() <= info.max:
+            return a.astype(dt)
+    raise OverflowError("node field exceeds int32")  # pragma: no cover
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedForest:
+    """One ensemble's packed node tables, host-side ([T, N] numpy arrays).
+
+    ``feat``/``op``/``tbin``/``loff`` are the narrow structural record
+    (dtypes chosen by ``pack_stacked``'s overflow rule); ``label`` is the
+    bit-preserved f32 leaf value.  ``n_num`` is the [K] feature mask the
+    predicate evaluation needs, ``meta`` the serving scalars exported by
+    ``GradientBoostedTrees.export_stacked`` (learning_rate, base, link_id,
+    num_steps, loss)."""
+    feat: np.ndarray     # [T, N] int8/int16/int32, -1 = leaf
+    op: np.ndarray       # [T, N] int8, -1 = leaf
+    tbin: np.ndarray     # [T, N] int8/int16/int32
+    loff: np.ndarray     # [T, N] left - node, -1 = leaf
+    label: np.ndarray    # [T, N] float32 (lossless)
+    n_num: np.ndarray    # [K] int32
+    meta: dict
+
+    @property
+    def n_trees(self) -> int:
+        return self.feat.shape[0]
+
+    @property
+    def max_nodes(self) -> int:
+        return self.feat.shape[1]
+
+    @property
+    def record_bytes(self) -> int:
+        """Structural bytes one walk step reads per (tree, node)."""
+        return (self.feat.dtype.itemsize + self.op.dtype.itemsize
+                + self.tbin.dtype.itemsize + self.loff.dtype.itemsize)
+
+
+def pack_stacked(tables: dict, n_num, meta: dict,
+                 n_valid: int | None = None) -> PackedForest:
+    """Pack stacked [T, N] WALK_FIELDS node tables into the narrow layout.
+
+    Validates the two structural invariants the layout relies on —
+    ``right == left + 1`` on every split node (sibling-pair allocation)
+    and ``leaf => left == -1`` — and chooses each field's width by the
+    int8 -> int16 -> int32 overflow rule.  ``n_valid`` (the max node
+    count over the stacked trees) trims the node axis to the slots any
+    walk can actually reach: the builder's ``max_nodes`` budget is an
+    upper bound, typically far larger than the built trees, and the
+    unreachable tail is pure serving memory.  The inverse is ``unpack``
+    (lossless over the kept slots)."""
+    if n_valid is not None:
+        n_valid = max(1, int(n_valid))
+        tables = {f: np.asarray(a)[:, :n_valid] for f, a in tables.items()}
+    feat = np.asarray(tables["feat"], dtype=np.int64)
+    op = np.asarray(tables["op"], dtype=np.int64)
+    tbin = np.asarray(tables["tbin"], dtype=np.int64)
+    left = np.asarray(tables["left"], dtype=np.int64)
+    right = np.asarray(tables["right"], dtype=np.int64)
+    label = np.asarray(tables["label"], dtype=np.float32)
+    split = left >= 0
+    if not np.array_equal(right[split], left[split] + 1):
+        raise ValueError("packed layout requires right == left + 1 on "
+                         "every split node (sibling-pair allocation)")
+    if np.any(np.asarray(tables["leaf"])[split]):
+        raise ValueError("packed layout requires leaf => left == -1")
+    node = np.arange(left.shape[1], dtype=np.int64)[None, :]
+    loff = np.where(split, left - node, -1)
+    return PackedForest(
+        feat=_narrowest(feat), op=op.astype(np.int8),
+        tbin=_narrowest(tbin), loff=_narrowest(loff), label=label,
+        n_num=np.asarray(n_num, dtype=np.int32), meta=dict(meta))
+
+
+def pack_trees(ensemble) -> PackedForest:
+    """Pack a fitted ``GradientBoostedTrees`` via its ``export_stacked``,
+    trimming the node axis to the largest built tree (``Tree.n_nodes``)."""
+    tables, n_num, meta = ensemble.export_stacked()
+    n_valid = max(t.n_nodes for t in ensemble.trees)
+    return pack_stacked(tables, n_num, meta, n_valid=n_valid)
+
+
+def unpack(packed: PackedForest) -> dict:
+    """Lossless inverse of ``pack_stacked`` (the parity oracle).
+
+    Reconstructs the serve-relevant WALK_FIELDS exactly: ``feat``,
+    ``op``, ``tbin``, ``left``, ``right``, ``leaf`` (= ``loff < 0``) and
+    ``label`` as [T, N] numpy arrays at the training-side dtypes.  The
+    dropped fields (count/score/depth/parent) are not representable —
+    serving never reads them — so the round-trip contract is: every field
+    this function returns matches the original stacked table bit-for-bit
+    on valid nodes (tests/test_serve_forest.py)."""
+    loff = packed.loff.astype(np.int64)
+    node = np.arange(packed.max_nodes, dtype=np.int64)[None, :]
+    split = loff >= 0
+    left = np.where(split, node + loff, -1)
+    return dict(
+        feat=packed.feat.astype(np.int32), op=packed.op.astype(np.int32),
+        tbin=packed.tbin.astype(np.int32),
+        left=left.astype(np.int32),
+        right=np.where(split, left + 1, -1).astype(np.int32),
+        leaf=~split, label=packed.label.astype(np.float32))
+
+
+def walk_bytes_per_request(n_trees: int, num_steps: int,
+                           record_bytes: int) -> int:
+    """Deterministic node-table bytes one request row reads.
+
+    Per walk step, per tree: one node record (``record_bytes``) — the
+    serve walk's only node-table traffic — plus one final label read per
+    tree.  The example-side bin gather (4 bytes per step per tree) is
+    identical for every layout, so it is excluded from the packed-vs-f32
+    ratio; ``FAT_STEP_BYTES`` is the f32-stacked ``record_bytes``
+    equivalent.  A pure function of shapes and dtypes — never a
+    wall-clock — which is what lets the serve-gate block on it."""
+    return num_steps * n_trees * record_bytes + n_trees * LABEL_BYTES
+
+
+# the fat-table serving fields, for reference in docs and tests
+assert set(("feat", "op", "tbin", "label", "count", "left", "right",
+            "leaf")) == set(WALK_FIELDS)

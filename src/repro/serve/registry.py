@@ -1,0 +1,297 @@
+"""Multi-tenant model registry: many forests resident, routed per request.
+
+Stacked node tables are just arrays, so multi-tenancy is an array problem:
+every registered ensemble's packed tables (serve.pack) live concatenated
+along a leading **model axis** — ``feat/op/tbin/loff/label`` are
+``[G, T, N]``, the per-model feature masks ``n_num`` are ``[G, K]`` and
+the serving scalars (``lr``, ``base``, ``link_id``) are ``[G]``.  One
+jitted walk serves a batch that MIXES tenants: each request carries its
+model id and every node-table read gathers through it
+(``feat[g, t, node]``), so routing costs one gather index, not one
+executable per tenant.
+
+Compile-count contract
+----------------------
+The walk's executable depends only on the **model-set shape**
+(``shape_sig``: the capacity-padded array shapes, dtypes and the global
+step bound) and the batch bucket — never on *which* tenants are
+registered.  The model axis is padded to ``capacity`` slots up front, so
+registering a tenant inside the existing envelope is an array write: same
+shapes, same executable, **no new compile** (asserted by the serve tests
+and the serve-gate).  Registering past the capacity, or a tenant with
+more trees / nodes / features than the current caps, grows the envelope
+— ``shape_sig`` changes and the next batch per bucket compiles once.
+Size the registry for the biggest expected tenant (``tree_cap`` /
+``node_cap`` / ``k_cap``) to make registration compile-free.
+
+Padding semantics (what makes the padded slots inert):
+
+  * empty model slots / padded trees: node 0 is a leaf (``loff = -1``)
+    with label 0 — it contributes exactly 0 to the ensemble sum;
+  * padded node slots are unreachable (no split points into them);
+  * padded feature columns have ``n_num = 0`` and are never named by any
+    split of a real tree.
+
+Routed predictions are **bit-identical** to each tenant's own
+``predict_device`` (the per-model fat-table walk): the walk mirrors
+core.predict._walk's step gate and core.forest._ensemble_predict's
+tree-sum order exactly, and the parity is a blocking serve-gate check.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.split import evaluate_predicate
+from repro.serve.pack import (FAT_STEP_BYTES, LABEL_BYTES, PackedForest,
+                              pack_trees, walk_bytes_per_request)
+
+__all__ = ["ModelRegistry", "Tenant", "routed_forest_walk"]
+
+# model-axis fill values making an empty slot inert (see module docs)
+_FILLS = dict(feat=-1, op=-1, tbin=-1, loff=-1, label=0.0)
+
+
+def routed_forest_walk(tables, bins, gids, *, num_steps: int):
+    """Walk every tree of each request's model; one batch, many tenants.
+
+    ``tables`` is the registry's device dict (``feat/op/tbin/loff/label``
+    [G, T, N], ``n_num`` [G, K] i32, ``lr``/``base`` [G] f32, ``link``
+    [G] i32); ``bins`` is the [B, K] pre-binned request batch and ``gids``
+    the [B] model ids.  Per step, per (tree, request): gather the packed
+    node record, evaluate the split predicate (core.split
+    .evaluate_predicate — the one definition of paper Table 3 semantics),
+    and step to ``node + loff`` (left) or ``node + loff + 1`` (right;
+    the packed layout stores only the left offset because children are
+    allocated in sibling pairs).  A leaf is ``loff < 0`` — exactly the
+    gate core.predict._walk reduces to at serve-time hyper-parameters
+    (no depth limit, min_samples_split 0), so node trajectories match the
+    fat-table walk step for step.  The per-tree leaf labels are reduced
+    in the same [T, B]-sum-over-axis-0 order as core.forest
+    ._ensemble_predict, and the loss link is selected branch-free by the
+    gathered ``link_id`` — routed outputs are bit-identical to each
+    model's own ``predict_device``.
+    """
+    t = tables["feat"].shape[1]
+    b = bins.shape[0]
+    t_idx = jnp.arange(t, dtype=jnp.int32)[:, None]          # [T, 1]
+    g_row = gids.astype(jnp.int32)[None, :]                  # [1, B]
+    b_idx = jnp.arange(b, dtype=jnp.int32)[None, :]          # [1, B]
+    node = jnp.zeros((t, b), dtype=jnp.int32)
+
+    def body(_, node):
+        loff = tables["loff"][g_row, t_idx, node].astype(jnp.int32)
+        can = loff >= 0
+        f = jnp.maximum(tables["feat"][g_row, t_idx, node]
+                        .astype(jnp.int32), 0)
+        xb = bins[b_idx, f]                                  # [T, B]
+        nn = tables["n_num"][jnp.broadcast_to(g_row, f.shape), f]
+        pos = evaluate_predicate(xb, nn,
+                                 tables["op"][g_row, t_idx, node]
+                                 .astype(jnp.int32),
+                                 tables["tbin"][g_row, t_idx, node]
+                                 .astype(jnp.int32))
+        nxt = node + loff + jnp.where(pos, 0, 1)
+        return jnp.where(can, nxt, node)
+
+    node = jax.lax.fori_loop(0, num_steps, body, node)
+    per_tree = tables["label"][g_row, t_idx, node]           # [T, B]
+    raw = tables["base"][gids] + tables["lr"][gids] * per_tree.sum(axis=0)
+    return jnp.where(tables["link"][gids] == 1, jax.nn.sigmoid(raw), raw)
+
+
+_routed_jit = jax.jit(routed_forest_walk, static_argnames=("num_steps",))
+
+
+@dataclasses.dataclass(frozen=True)
+class Tenant:
+    """One registered model's serving metadata (host-side bookkeeping)."""
+    name: str
+    model_id: int
+    n_trees: int
+    max_nodes: int
+    k: int
+    num_steps: int
+    meta: dict
+
+
+class ModelRegistry:
+    """Capacity-padded, gather-routed home for many fitted ensembles.
+
+    ``capacity`` pre-sizes the model axis; ``tree_cap`` / ``node_cap`` /
+    ``k_cap`` optionally pre-size the tree / node / feature axes so that
+    later registrations never grow the envelope (each growth changes
+    ``shape_sig`` and costs one recompile per bucket — see module docs).
+    ``add`` accepts a fitted ``GradientBoostedTrees`` (packed via
+    serve.pack) or a ready ``PackedForest``.
+    """
+
+    def __init__(self, capacity: int = 4, tree_cap: int = 0,
+                 node_cap: int = 0, k_cap: int = 0):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.tenants: list[Tenant] = []
+        self._packed: list[PackedForest] = []
+        self._tree_cap = tree_cap
+        self._node_cap = node_cap
+        self._k_cap = k_cap
+        self._num_steps = 1
+        self._np = None           # host buffers, rebuilt on envelope growth
+        self._tables = None       # device dict, rebuilt on any mutation
+
+    # -- registration ------------------------------------------------------
+
+    def add(self, name: str, model) -> int:
+        """Register a tenant; returns its model id (the routing index).
+
+        An array write when the model fits the current envelope (no shape
+        change, no recompile); otherwise the envelope grows to fit and the
+        host buffers are rebuilt (one recompile per bucket on next use)."""
+        packed = model if isinstance(model, PackedForest) else \
+            pack_trees(model)
+        mid = len(self.tenants)
+        grew = mid >= self.capacity
+        while mid >= self.capacity:
+            self.capacity *= 2
+        k = packed.n_num.shape[0]
+        grew |= (packed.n_trees > self._tree_cap
+                 or packed.max_nodes > self._node_cap or k > self._k_cap)
+        self._tree_cap = max(self._tree_cap, packed.n_trees)
+        self._node_cap = max(self._node_cap, packed.max_nodes)
+        self._k_cap = max(self._k_cap, k)
+        steps = int(packed.meta["num_steps"])
+        grew |= steps > self._num_steps
+        self._num_steps = max(self._num_steps, steps)
+        if self._np is not None:
+            for f in ("feat", "tbin", "loff"):
+                grew |= (np.promote_types(self._np[f].dtype,
+                                          getattr(packed, f).dtype)
+                         != self._np[f].dtype)
+        self.tenants.append(Tenant(
+            name=name, model_id=mid, n_trees=packed.n_trees,
+            max_nodes=packed.max_nodes, k=k, num_steps=steps,
+            meta=dict(packed.meta)))
+        self._packed.append(packed)
+        if self._np is None or grew:
+            self._rebuild()
+        else:
+            self._write_slot(mid)
+        self._tables = None
+        return mid
+
+    def _alloc(self):
+        g, t, n, k = (self.capacity, self._tree_cap, self._node_cap,
+                      self._k_cap)
+        dt = {f: functools.reduce(
+            np.promote_types, [getattr(p, f).dtype for p in self._packed])
+            for f in ("feat", "tbin", "loff")}
+        buf = {f: np.full((g, t, n), _FILLS[f], dtype=dt[f])
+               for f in ("feat", "tbin", "loff")}
+        buf["op"] = np.full((g, t, n), _FILLS["op"], dtype=np.int8)
+        buf["label"] = np.zeros((g, t, n), dtype=np.float32)
+        buf["n_num"] = np.zeros((g, k), dtype=np.int32)
+        buf["lr"] = np.zeros((g,), dtype=np.float32)
+        buf["base"] = np.zeros((g,), dtype=np.float32)
+        buf["link"] = np.zeros((g,), dtype=np.int32)
+        return buf
+
+    def _write_slot(self, mid: int):
+        p = self._packed[mid]
+        t, n, k = p.n_trees, p.max_nodes, p.n_num.shape[0]
+        for f in ("feat", "op", "tbin", "loff", "label"):
+            self._np[f][mid, :t, :n] = getattr(p, f)
+        self._np["n_num"][mid, :k] = p.n_num
+        self._np["lr"][mid] = p.meta["learning_rate"]
+        self._np["base"][mid] = p.meta["base"]
+        self._np["link"][mid] = p.meta["link_id"]
+
+    def _rebuild(self):
+        self._np = self._alloc()
+        for mid in range(len(self._packed)):
+            self._write_slot(mid)
+
+    # -- serving surface ---------------------------------------------------
+
+    @property
+    def num_steps(self) -> int:
+        """Global static walk bound: max over tenants (extra steps stay at
+        the leaf, so per-tenant outputs are unaffected)."""
+        return self._num_steps
+
+    @property
+    def shape_sig(self) -> tuple:
+        """The model-set shape: everything the walk executable depends on
+        besides the batch bucket.  Two registries (or one registry before
+        and after an in-envelope ``add``) with equal ``shape_sig`` share
+        compiled code — the serve layer's compile-cache key."""
+        if self._np is None:
+            raise ValueError("empty registry")
+        return (self.capacity, self._tree_cap, self._node_cap, self._k_cap,
+                self._num_steps, self._np["feat"].dtype.str,
+                self._np["tbin"].dtype.str, self._np["loff"].dtype.str)
+
+    @property
+    def tables(self) -> dict:
+        """The device-resident model-set tables (cached until mutation)."""
+        if self._np is None:
+            raise ValueError("empty registry")
+        if self._tables is None:
+            self._tables = {f: jnp.asarray(v) for f, v in self._np.items()}
+        return self._tables
+
+    @property
+    def record_bytes(self) -> int:
+        """Structural bytes per packed node record at registry dtypes."""
+        np_ = self._np
+        return (np_["feat"].dtype.itemsize + np_["op"].dtype.itemsize
+                + np_["tbin"].dtype.itemsize + np_["loff"].dtype.itemsize)
+
+    def request_cost(self) -> dict:
+        """Deterministic per-request accounting (a function of the
+        model-set shape, never a wall-clock — the serve-gate's blocking
+        quantity).  One request row walks ``num_steps`` steps over all
+        ``tree_cap`` resident tree lanes; per (step, tree) it reads one
+        packed node record plus one example bin (4 bytes, layout-
+        independent), and one f32 label per tree at the end.  ``ratio``
+        compares the packed node-table bytes to the same walk over the
+        f32/i32 stacked layout (pack.FAT_STEP_BYTES per step per tree)."""
+        t, steps = self._tree_cap, self._num_steps
+        packed = walk_bytes_per_request(t, steps, self.record_bytes)
+        fat = walk_bytes_per_request(t, steps, FAT_STEP_BYTES)
+        bin_bytes = steps * t * 4
+        # per (step, tree): predicate eval ~4 ops + offset add/select ~2;
+        # per tree: one multiply-add into the ensemble sum; plus the link.
+        flops = steps * t * 6 + t * 2 + 4
+        return dict(node_bytes_packed=packed, node_bytes_f32=fat,
+                    bin_bytes=bin_bytes, flops=flops,
+                    ratio=round(packed / fat, 4),
+                    record_bytes=self.record_bytes,
+                    label_bytes=LABEL_BYTES)
+
+    def predict(self, model_ids, bins) -> jax.Array:
+        """Routed predictions for a mixed-tenant batch (convenience path;
+        the bucketed server in serve.batching is the production path).
+        ``model_ids`` [B] int, ``bins`` [B, K] int32 padded to the
+        registry's feature cap (``pad_bins``)."""
+        return _routed_jit(self.tables, jnp.asarray(bins, dtype=jnp.int32),
+                           jnp.asarray(model_ids, dtype=jnp.int32),
+                           num_steps=self._num_steps)
+
+    def pad_bins(self, bins) -> np.ndarray:
+        """Right-pad [n, k_model] request rows to the registry's feature
+        cap (padded columns are never read: no real split names them)."""
+        bins = np.asarray(bins, dtype=np.int32)
+        if bins.ndim != 2:
+            raise ValueError(f"bins must be [n, k], got {bins.shape}")
+        pad = self._k_cap - bins.shape[1]
+        if pad < 0:
+            raise ValueError(f"request has {bins.shape[1]} features, "
+                             f"registry cap is {self._k_cap}")
+        if pad:
+            bins = np.pad(bins, ((0, 0), (0, pad)))
+        return bins

@@ -1,0 +1,305 @@
+"""Serving layer: packed tables, routed multi-tenancy, bucketed batching.
+
+The three serve-gate contracts, unit-sized (docs/serving.md):
+bit-exact routing parity, bounded compiles, lossless packing.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GradientBoostedTrees, TreeConfig, fit_bins, transform
+from repro.core.predict import stack_trees
+from repro.data import (make_classification, make_regression,
+                        train_val_test_split)
+from repro.serve import (BatchPolicy, ForestServer, ModelRegistry,
+                         pack_stacked, pack_trees, unpack,
+                         walk_bytes_per_request)
+from repro.serve.pack import FAT_STEP_BYTES
+
+
+def _fit(loss="squared", n_trees=5, max_depth=4, k=5, m=1200, seed=0,
+         n_bins=16):
+    if loss == "logistic":
+        cols, y = make_classification(m, k, 2, seed=seed)
+    else:
+        cols, y = make_regression(m, k, seed=seed)
+    (tr_c, tr_y), (va_c, _), _ = train_val_test_split(cols, y, seed=seed)
+    table = fit_bins(tr_c, max_num_bins=n_bins)
+    gbt = GradientBoostedTrees(
+        n_trees=n_trees, loss=loss, seed=seed,
+        config=TreeConfig(max_depth=max_depth, task="regression_variance"))
+    gbt.fit(table, tr_y.astype(np.float32))
+    return gbt, transform(va_c, table)
+
+
+# -- pack.py ---------------------------------------------------------------
+
+
+def test_pack_round_trip_bit_exact():
+    """unpack(pack(...)) reproduces every serve-relevant field exactly."""
+    gbt, _ = _fit(n_trees=4, max_depth=5)
+    packed = pack_trees(gbt)
+    n = packed.max_nodes
+    orig = {f: np.asarray(v)[:, :n]
+            for f, v in stack_trees(gbt.trees).items()}
+    got = unpack(packed)
+    for f in ("feat", "op", "tbin", "left", "right", "label"):
+        np.testing.assert_array_equal(got[f], orig[f].astype(got[f].dtype),
+                                      err_msg=f)
+    np.testing.assert_array_equal(got["leaf"], orig["leaf"].astype(bool))
+
+
+def test_pack_trims_node_axis_and_narrows_dtypes():
+    gbt, _ = _fit(n_trees=3, max_depth=3, k=4)
+    packed = pack_trees(gbt)
+    # builder budget is 2*M+1 nodes; depth-3 trees use a handful
+    assert packed.max_nodes <= 15
+    assert packed.max_nodes == max(t.n_nodes for t in gbt.trees)
+    # tiny shapes: every structural field fits int8 -> 4-byte record
+    for f in ("feat", "op", "tbin", "loff"):
+        assert getattr(packed, f).dtype == np.int8, f
+    assert packed.record_bytes == 4
+    assert packed.label.dtype == np.float32
+
+
+def test_pack_overflow_rule_widens_per_field():
+    """int8 overflows force int16 (and int16 -> int32), per field."""
+    tables = dict(feat=np.array([[0, -1, -1]]),
+                  op=np.array([[0, -1, -1]]),
+                  tbin=np.array([[300, -1, -1]]),     # > int8
+                  left=np.array([[1, -1, -1]]),
+                  right=np.array([[2, -1, -1]]),
+                  leaf=np.array([[False, True, True]]),
+                  label=np.array([[0.0, 1.0, 2.0]], dtype=np.float32),
+                  count=np.array([[3, 1, 2]]))
+    p = pack_stacked(tables, n_num=[1], meta=dict(
+        learning_rate=1.0, base=0.0, link_id=0, num_steps=1, loss="squared"))
+    assert p.tbin.dtype == np.int16       # forced wide
+    assert p.feat.dtype == np.int8        # still narrow
+    assert p.record_bytes == 5
+    # widening shows up in the byte accounting, not a refusal
+    assert walk_bytes_per_request(1, 1, p.record_bytes) == 5 + 4
+
+
+def test_pack_validates_sibling_pair_invariant():
+    tables = dict(feat=np.array([[0, -1, -1]]), op=np.array([[0, -1, -1]]),
+                  tbin=np.array([[1, -1, -1]]),
+                  left=np.array([[1, -1, -1]]),
+                  right=np.array([[5, -1, -1]]),      # not left + 1
+                  leaf=np.array([[False, True, True]]),
+                  label=np.zeros((1, 3), dtype=np.float32),
+                  count=np.ones((1, 3)))
+    with pytest.raises(ValueError, match="right == left"):
+        pack_stacked(tables, n_num=[1], meta=dict(
+            learning_rate=1.0, base=0.0, link_id=0, num_steps=1,
+            loss="squared"))
+
+
+def test_pack_round_trip_property():
+    """Property test: random valid sibling-pair trees survive the pack /
+    unpack round trip losslessly at every width the overflow rule picks."""
+    pytest.importorskip("hypothesis")  # CI installs it; degrade locally
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def check(data):
+        n_split = data.draw(st.integers(0, 40))
+        n = 2 * n_split + 1
+        # allocate splits at the front, children in sibling pairs after
+        left = np.full(n, -1, dtype=np.int64)
+        for i in range(n_split):
+            left[i] = 1 + 2 * i
+        split = left >= 0
+        k = data.draw(st.integers(1, 300))
+        feat = np.where(split, data.draw(st.integers(0, k - 1)), -1)
+        tbin = np.where(split, data.draw(st.integers(0, 70_000)), -1)
+        op = np.where(split, data.draw(st.integers(0, 2)), -1)
+        label = np.round(data.draw(st.floats(-1e6, 1e6)), 3) * ~split
+        tables = dict(feat=feat[None], op=op[None], tbin=tbin[None],
+                      left=left[None],
+                      right=np.where(split, left + 1, -1)[None],
+                      leaf=~split[None],
+                      label=label[None].astype(np.float32),
+                      count=np.ones((1, n)))
+        p = pack_stacked(tables, n_num=np.zeros(k), meta=dict(
+            learning_rate=1.0, base=0.0, link_id=0, num_steps=1,
+            loss="squared"))
+        got = unpack(p)
+        for f in ("feat", "op", "tbin", "left", "right", "label"):
+            np.testing.assert_array_equal(
+                got[f], tables[f].astype(got[f].dtype), err_msg=f)
+        np.testing.assert_array_equal(got["leaf"], tables["leaf"])
+
+    check()
+
+
+# -- registry.py -----------------------------------------------------------
+
+
+def test_routed_parity_single_and_mixed_tenants():
+    """Routed predictions == each tenant's own predict_device, bit for
+    bit — single-tenant batches and a freely interleaved one."""
+    tenants = [_fit("squared", n_trees=4, max_depth=4, seed=0),
+               _fit("logistic", n_trees=6, max_depth=3, seed=1),
+               _fit("squared", n_trees=2, max_depth=5, k=3, seed=2)]
+    registry = ModelRegistry(capacity=4)
+    mids = [registry.add(f"t{i}", g) for i, (g, _) in enumerate(tenants)]
+
+    wants = []
+    for (gbt, bins), mid in zip(tenants, mids):
+        want = np.asarray(gbt.predict_device(bins))
+        got = np.asarray(registry.predict(
+            np.full(bins.shape[0], mid), registry.pad_bins(bins)))
+        np.testing.assert_array_equal(want, got)
+        wants.append(want)
+
+    # mixed batch: one row from each tenant, interleaved twice
+    gids = np.array([mids[0], mids[1], mids[2], mids[2], mids[1], mids[0]])
+    rows = np.concatenate([registry.pad_bins(tenants[m][1][j:j + 1])
+                           for j, m in enumerate(gids)])
+    got = np.asarray(registry.predict(gids, rows))
+    want = np.array([wants[m][j] for j, m in enumerate(gids)])
+    np.testing.assert_array_equal(want, got)
+
+
+def test_registry_byte_accounting():
+    gbt, _ = _fit(n_trees=4)
+    registry = ModelRegistry(capacity=2)
+    registry.add("a", gbt)
+    cost = registry.request_cost()
+    t, s = registry._tree_cap, registry.num_steps
+    assert cost["node_bytes_packed"] == walk_bytes_per_request(
+        t, s, registry.record_bytes)
+    assert cost["node_bytes_f32"] == walk_bytes_per_request(
+        t, s, FAT_STEP_BYTES)
+    assert cost["ratio"] <= 0.5           # the serve-gate ceiling
+    assert cost["flops"] == s * t * 6 + t * 2 + 4
+
+
+def test_registry_feature_count_mismatch_raises():
+    gbt, bins = _fit(k=5)
+    registry = ModelRegistry(capacity=2)
+    registry.add("a", gbt)
+    with pytest.raises(ValueError, match="feature"):
+        registry.pad_bins(np.zeros((2, 9), dtype=np.int32))
+    # fewer features than cap is fine (right-padded, never read)
+    assert registry.pad_bins(np.zeros((2, 3), dtype=np.int32)).shape == (2, 5)
+
+
+# -- batching.py -----------------------------------------------------------
+
+
+def test_bucket_selection_edges():
+    gbt, _ = _fit(n_trees=2, max_depth=2)
+    registry = ModelRegistry(capacity=2)
+    registry.add("a", gbt)
+    server = ForestServer(registry, BatchPolicy(buckets=(1, 8, 64)))
+    assert server.bucket_for(1) == 1
+    assert server.bucket_for(2) == 8
+    assert server.bucket_for(8) == 8
+    assert server.bucket_for(9) == 64
+    assert server.bucket_for(64) == 64
+    with pytest.raises(ValueError, match="exceeds largest bucket"):
+        server.bucket_for(65)
+    with pytest.raises(ValueError, match="ascending"):
+        BatchPolicy(buckets=(8, 1))
+
+
+def test_padding_masked_bit_exact_and_oversize_chunking():
+    """Padded rows never leak: every batch size around and past each
+    bucket edge returns exactly predict_device's output."""
+    gbt, bins = _fit(n_trees=3, max_depth=4, m=1500)
+    registry = ModelRegistry(capacity=2)
+    mid = registry.add("a", gbt)
+    server = ForestServer(registry, BatchPolicy(buckets=(1, 8, 64)))
+    want = np.asarray(gbt.predict_device(bins))
+    for n in (1, 2, 7, 8, 9, 63, 64, 65, 150):   # incl. oversize splits
+        got = server.predict(mid, bins[:n])
+        np.testing.assert_array_equal(want[:n], got, err_msg=f"n={n}")
+    # the 150-row request spanned three 64-cap chunks
+    assert server.stats["batches"] >= 3
+
+
+def test_compile_cache_one_per_bucket_and_in_envelope_add():
+    """One compile per (bucket, model-set); replay hits the cache; an
+    in-envelope tenant add keeps serving the same executables; envelope
+    growth recompiles once per touched bucket."""
+    a, bins_a = _fit(n_trees=4, max_depth=4, seed=0)
+    registry = ModelRegistry(capacity=4)
+    mid_a = registry.add("a", a)
+    server = ForestServer(registry, BatchPolicy(buckets=(8, 64)))
+
+    server.predict(mid_a, bins_a[:5])
+    server.predict(mid_a, bins_a[:60])
+    assert server.compile_count == 2              # one per bucket
+    server.predict(mid_a, bins_a[:5])
+    server.predict(mid_a, bins_a[:60])
+    assert server.compile_count == 2              # cache hits
+    sig = registry.shape_sig
+
+    # smaller tenant fits the envelope: array write, zero new compiles
+    b, bins_b = _fit(n_trees=2, max_depth=3, seed=1)
+    mid_b = registry.add("b", b)
+    assert registry.shape_sig == sig
+    np.testing.assert_array_equal(
+        np.asarray(b.predict_device(bins_b)),
+        server.predict(mid_b, bins_b))
+    np.testing.assert_array_equal(
+        np.asarray(a.predict_device(bins_a)[:5]),
+        server.predict(mid_a, bins_a[:5]))
+    assert server.compile_count == 2
+
+    # bigger tenant grows the envelope: new sig, one recompile per bucket
+    c, bins_c = _fit(n_trees=8, max_depth=5, seed=2)
+    mid_c = registry.add("c", c)
+    assert registry.shape_sig != sig
+    server.predict(mid_c, bins_c[:5])
+    assert server.compile_count == 3
+    server.predict(mid_c, bins_c[:5])
+    assert server.compile_count == 3
+    # old tenants still exact on the grown tables
+    np.testing.assert_array_equal(
+        np.asarray(a.predict_device(bins_a)[:5]),
+        server.predict(mid_a, bins_a[:5]))
+
+
+def test_flush_policy_injected_timestamps():
+    """max_delay flushes via tick(); max_batch flushes inside submit();
+    result() forces a flush; outputs split back per request exactly."""
+    gbt, bins = _fit(n_trees=2, max_depth=3)
+    registry = ModelRegistry(capacity=2)
+    mid = registry.add("a", gbt)
+    want = np.asarray(gbt.predict_device(bins))
+
+    server = ForestServer(registry, BatchPolicy(
+        buckets=(8, 64), max_delay=0.5, max_batch=16))
+    p1 = server.submit(mid, bins[:3], now=100.0)
+    p2 = server.submit(mid, bins[3:5], now=100.1)
+    assert not p1.done() and not p2.done()
+    server.tick(now=100.2)                 # oldest age 0.2 < 0.5
+    assert not p1.done()
+    server.tick(now=100.6)                 # 0.6 >= 0.5 -> flush both
+    assert p1.done() and p2.done()
+    np.testing.assert_array_equal(want[:3], p1.result())
+    np.testing.assert_array_equal(want[3:5], p2.result())
+    assert server.stats["batches"] == 1    # one mixed flush, one bucket
+
+    # max_batch: the 16th pending row flushes inside submit()
+    p3 = server.submit(mid, bins[:10], now=200.0)
+    assert not p3.done()
+    p4 = server.submit(mid, bins[10:16], now=200.0)
+    assert p3.done() and p4.done()
+    np.testing.assert_array_equal(want[:10], p3.result())
+
+    # result() on a queued request forces the flush itself
+    p5 = server.submit(mid, bins[:2], now=300.0)
+    np.testing.assert_array_equal(want[:2], p5.result())
+
+
+def test_unknown_model_id_rejected():
+    gbt, bins = _fit(n_trees=2, max_depth=2)
+    registry = ModelRegistry(capacity=2)
+    registry.add("a", gbt)
+    server = ForestServer(registry)
+    with pytest.raises(ValueError, match="unknown model_id"):
+        server.submit(5, bins[:1])

@@ -1,0 +1,104 @@
+"""Docs checker: executable snippets + resolvable links, CI-blocking.
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Two checks over README.md and docs/*.md:
+
+  1. every fenced ``python`` code block in docs/*.md is executed (fresh
+     namespace per block, repo root as cwd, src on sys.path) — a snippet
+     that drifts from the real API fails the build instead of lying to
+     the reader.  A block whose first line is ``# no-run`` is skipped
+     (for illustrative pseudo-code; none today).
+  2. every relative markdown link target must exist on disk (http(s)
+     and #-anchor links are skipped).
+
+Exit status is the number of failures.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — excluding images; target split before any #anchor
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)#\s]+)[^)]*\)")
+
+
+def doc_files():
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                      if f.endswith(".md"))
+    return [p for p in out if os.path.exists(p)]
+
+
+def python_blocks(text):
+    """Yield (start_line, source) per fenced python block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i].strip())
+        if m and m.group(1) == "python":
+            start, body = i + 1, []
+            i += 1
+            while i < len(lines) and lines[i].strip() != "```":
+                body.append(lines[i])
+                i += 1
+            yield start + 1, "\n".join(body)
+        i += 1
+
+
+def check_links(path, text):
+    failures = []
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            failures.append(f"{os.path.relpath(path, REPO)}: broken link "
+                            f"-> {target}")
+    return failures
+
+
+def run_block(path, line, src):
+    rel = os.path.relpath(path, REPO)
+    if src.lstrip().startswith("# no-run"):
+        print(f"SKIP  {rel}:{line} (marked no-run)")
+        return []
+    cwd = os.getcwd()
+    try:
+        os.chdir(REPO)
+        exec(compile(src, f"{rel}:{line}", "exec"), {"__name__": "__docs__"})
+        print(f"OK    {rel}:{line} python block")
+        return []
+    except Exception as e:  # noqa: BLE001 — any snippet failure blocks
+        return [f"{rel}:{line}: snippet raised {type(e).__name__}: {e}"]
+    finally:
+        os.chdir(cwd)
+
+
+def main():
+    failures = []
+    for path in doc_files():
+        with open(path) as f:
+            text = f.read()
+        failures += check_links(path, text)
+        # only docs/ snippets run; README's are shell commands
+        if os.path.dirname(path).endswith("docs"):
+            for line, src in python_blocks(text):
+                failures += run_block(path, line, src)
+    if failures:
+        print("\n".join(f"FAIL  {f}" for f in failures))
+    print(f"check_docs: {len(doc_files())} files, {len(failures)} failure(s)")
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
