@@ -93,21 +93,21 @@ def _measure(m, k, n_trees, max_depth, n_bins, top_rate, other_rate, seed):
     # single-shard GOSS loop: the quality reference
     single = mk(goss)
     _, single_s = _fit_counting(single, table, tr_y)
-    auc_single = auc(va_y, single.predict(vb))
+    auc_single = auc(va_y, single.predict_proba(vb))
 
     # sharded GOSS loop
     dist_goss = mk(goss)
     goss_states, dist_s = _fit_states(dist_goss, table, tr_y, mesh=mesh,
                                       dist=dist)
     goss_rows = _level_rows(goss_states)
-    auc_dist = auc(va_y, dist_goss.predict(vb))
+    auc_dist = auc(va_y, dist_goss.predict_proba(vb))
 
     # sharded unsampled loop: the scatter-work denominator
     dist_full = mk(None)
     full_states, full_s = _fit_states(dist_full, table, tr_y, mesh=mesh,
                                       dist=dist)
     full_rows = _level_rows(full_states)
-    auc_full = auc(va_y, dist_full.predict(vb))
+    auc_full = auc(va_y, dist_full.predict_proba(vb))
 
     # per-level collective bytes from the sharded GOSS fit's own states:
     # packed = width/2 whenever the parent cache rode along (subtraction),

@@ -1,0 +1,232 @@
+"""KDD99 multiclass softmax-boosting benchmark — the paper's headline
+dataset under the unified estimator API.
+
+    PYTHONPATH=src python -m benchmarks.bench_kdd99 [--smoke | --gate]
+
+The paper trains its UDT on the KDD99 10% subset (494,021 connections,
+41 hybrid features) in under a second; this benchmark fits the MULTICLASS
+softmax ``GradientBoostedTrees`` on the conventional 5-superclass
+collapse (normal / dos / probe / r2l / u2r) and reports:
+
+  * validation ACCURACY vs the base rate (the majority-class frequency —
+    ~79% dos on the real marginals, which the synthetic fallback
+    reproduces), the gate's blocking quality axis;
+  * SCATTER-WORK COUNTERS: the example rows every level's histogram pass
+    accumulates, summed over all rounds AND all class-trees — counted
+    from the builder's own per-level BuildState (the bench_goss
+    convention extended over the class axis), a deterministic function
+    of the built trees, not a wall-clock;
+  * the batched-build COMPILE COUNT: the K class-trees of every round go
+    through ONE vmapped level step (core.tree._chunk_step_classes), so
+    the whole ensemble must trace it exactly once per chunk shape;
+  * wall-clock fit seconds vs the paper's <1 s claim — RECORDED for the
+    trajectory, deliberately NOT gated (CI hardware is shared and slow;
+    the deterministic counters above are the blocking quantities).
+
+Data resolution is hermetic (repro.data.kdd99): a cached real download
+when the environment ever allowed one, else the schema/marginal-matched
+synthetic twin.  ``--gate`` blocks on the accuracy floor and — only when
+the baseline and the current run saw the SAME source — ratchets against
+the committed BENCH_kdd99.json, writing its own report to a throwaway
+path (no self-ratchet, and a fallback run can never ratchet real-data
+numbers).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import GradientBoostedTrees, TreeConfig, fit_bins, transform
+from repro.core.tree import _chunk_step_classes
+from repro.data import train_val_test_split
+from repro.data.kdd99 import SUPERCLASSES, load_kdd99
+
+# the one definition of the CI smoke-gate shapes (benchmarks/run.py
+# --smoke and the --gate mode both use it, so artifacts stay comparable)
+SMOKE = dict(m=12_000, n_trees=5, max_depth=6, n_bins=64, seed=0)
+
+ACC_MARGIN = 0.05      # accuracy must beat the base rate by this, absolute
+ACC_SLACK = 0.01       # tolerated absolute drop vs the committed baseline
+ROWS_SLACK = 1.05      # tolerated growth of the deterministic scatter rows
+PAPER_CLAIM = dict(dataset="KDD99 10% subset", m=494_021,
+                   train_s_single_tree=1.0,
+                   note="paper trains one UDT on the full 10% subset in "
+                        "<1 s; recorded for the trajectory, not gated")
+
+
+def _class_level_rows(states_per_round):
+    """Scatter rows per boosting round from the batched builder's
+    BuildStates: ``bench_goss._level_rows`` extended over the class axis
+    (cursors are [C] vectors, assignments [C, M], the cached level
+    histogram [C, W, ...]).  Root pass counts every active row of every
+    class; later levels count per-pair minima whenever the parent cache
+    rode along — the exact work the sibling-subtraction scatter does."""
+    totals = []
+    for states in states_per_round:
+        rows = int(np.sum(np.asarray(states[0].assign) >= 0))     # root pass
+        for st in states:
+            ls = np.asarray(st.level_start)
+            le = np.asarray(st.level_end)
+            if (le <= ls).all():
+                break
+            a = np.asarray(st.assign)
+            for c in range(a.shape[0]):
+                if le[c] <= ls[c]:
+                    continue
+                ac = a[c]
+                cnt = np.bincount(ac[(ac >= ls[c]) & (ac < le[c])] - ls[c],
+                                  minlength=le[c] - ls[c])
+                if st.phist is not None and (le[c] - ls[c]) % 2 == 0:
+                    rows += int(np.minimum(cnt[0::2], cnt[1::2]).sum())
+                else:
+                    rows += int(cnt.sum())
+        totals.append(rows)
+    return totals
+
+
+def run(m=60_000, n_trees=10, max_depth=6, n_bins=64, seed=0,
+        out="BENCH_kdd99.json"):
+    cols, y, info = load_kdd99(m=m, seed=seed)
+    (tr_c, tr_y), (va_c, va_y), _ = train_val_test_split(cols, y, seed=seed)
+    t0 = time.perf_counter()
+    table = fit_bins(tr_c, max_num_bins=n_bins)
+    bin_s = time.perf_counter() - t0
+    vb = transform(va_c, table)
+
+    # _cache_size is jax-internal; report -1 (gate-exempt) if it vanishes
+    cache_size = getattr(_chunk_step_classes, "_cache_size", None)
+    compiles0 = cache_size() if cache_size else 0
+    per_round, round_compiles = [], []
+
+    def cb(state):
+        if state.depth == 2:            # a new round's first completed level
+            per_round.append([])
+            round_compiles.append(cache_size() if cache_size else 0)
+        per_round[-1].append(state)
+    gbt = GradientBoostedTrees(
+        n_trees=n_trees, loss="softmax", seed=seed,
+        config=TreeConfig(max_depth=max_depth, task="regression_variance"))
+    t0 = time.perf_counter()
+    gbt.fit(table, tr_y, level_callback=cb)
+    fit_s = time.perf_counter() - t0
+    # total traces of the batched step, and the STEADY-STATE count: traces
+    # minted after round 1 finished.  Round 1 pays one compile per distinct
+    # chunk shape (slot-count bucket x subtraction statics); every later
+    # round must reuse them — "compile once per ensemble", the acceptance
+    # counter.  -1 = counter unavailable (gate-exempt).
+    if cache_size:
+        step_compiles = cache_size() - compiles0
+        steady_compiles = (cache_size() - round_compiles[1]
+                           if len(round_compiles) > 1 else 0)
+    else:
+        step_compiles = steady_compiles = -1
+
+    pred = gbt.predict(vb)
+    acc = float((pred == va_y).mean())
+    base_rate = float(np.bincount(va_y).max() / len(va_y))
+    rows = _class_level_rows(per_round)
+
+    report = dict(
+        config=dict(m=m, n_trees=n_trees, max_depth=max_depth,
+                    n_bins=n_bins, seed=seed),
+        source=info["source"], priors=info["priors"],
+        classes=list(SUPERCLASSES), n_classes=len(SUPERCLASSES),
+        acc=round(acc, 4), base_rate=round(base_rate, 4),
+        acc_over_base=round(acc - base_rate, 4),
+        scatter_rows_per_round=rows, total_scatter_rows=sum(rows),
+        batched_step_compiles=step_compiles,
+        steady_state_compiles=steady_compiles,
+        wall_bin_s=round(bin_s, 2), wall_fit_s=round(fit_s, 2),
+        paper_claim=PAPER_CLAIM,
+    )
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print("kdd99,metric,value")
+    print(f"kdd99,source,{report['source']}")
+    print(f"kdd99,acc,{report['acc']}")
+    print(f"kdd99,base_rate,{report['base_rate']}")
+    print(f"kdd99,total_scatter_rows,{report['total_scatter_rows']}")
+    print(f"kdd99,batched_step_compiles,{step_compiles}")
+    print(f"kdd99,steady_state_compiles,{steady_compiles}")
+    print(f"kdd99_total,acc {report['acc']} (base {report['base_rate']}), "
+          f"{sum(rows)} scatter rows / {n_trees} rounds x "
+          f"{len(SUPERCLASSES)} classes, fit {report['wall_fit_s']}s "
+          f"(paper claim: <{PAPER_CLAIM['train_s_single_tree']}s single "
+          f"tree at m={PAPER_CLAIM['m']}), -> {out}")
+    return report
+
+
+def gate(baseline_path="BENCH_kdd99.json"):
+    """Blocking CI gate.  Always blocks on the accuracy floor (beat the
+    base rate by ACC_MARGIN — a softmax ensemble that cannot beat
+    predict-the-majority has a broken multiclass round).  Ratchets
+    accuracy and the deterministic scatter rows against the committed
+    baseline ONLY when both runs saw the same data source — a fallback
+    run never ratchets (or is judged by) real-data numbers — and writes
+    its report to a throwaway path (the no-self-ratchet rule)."""
+    baseline = None
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    report = run(**SMOKE, out=os.path.join(
+        tempfile.gettempdir(), "BENCH_kdd99_gate.json"))
+    want_acc = report["base_rate"] + ACC_MARGIN
+    ok = report["acc"] >= want_acc
+    lines = [f"kdd99-gate: acc {report['acc']} on {report['source']} data "
+             f"(base rate {report['base_rate']}, require >= "
+             f"{round(want_acc, 4)}) -> {'OK' if ok else 'FAIL'}"]
+    # -1 = counter unavailable on this jax (exempt); <= 1 slack for one
+    # never-before-seen width bucket in a later round
+    compiles_ok = report["steady_state_compiles"] <= 1
+    ok = ok and compiles_ok
+    lines.append(f"kdd99-gate: steady-state step compiles "
+                 f"{report['steady_state_compiles']} of "
+                 f"{report['batched_step_compiles']} total (require <= 1 "
+                 f"after round 1: rounds reuse ONE traced step, never one "
+                 f"per class) -> {'OK' if compiles_ok else 'FAIL'}")
+    if baseline is None:
+        lines.append(f"kdd99-gate: no baseline at {baseline_path} "
+                     "(floor checks only)")
+    elif baseline.get("config") != report["config"]:
+        lines.append("kdd99-gate: baseline config differs "
+                     "(floor checks only)")
+    elif baseline.get("source") != report["source"]:
+        lines.append(f"kdd99-gate: baseline source "
+                     f"{baseline.get('source')!r} != current "
+                     f"{report['source']!r} — cross-source ratchet skipped "
+                     "(floor checks only)")
+    else:
+        want = baseline["acc"] - ACC_SLACK
+        acc_ok = report["acc"] >= want
+        ok = ok and acc_ok
+        lines.append(f"kdd99-gate: baseline acc {baseline['acc']}, require "
+                     f">= {round(want, 4)} -> {'OK' if acc_ok else 'FAIL'}")
+        want_rows = ROWS_SLACK * baseline["total_scatter_rows"]
+        rows_ok = report["total_scatter_rows"] <= want_rows
+        ok = ok and rows_ok
+        lines.append(f"kdd99-gate: scatter rows "
+                     f"{report['total_scatter_rows']} (baseline "
+                     f"{baseline['total_scatter_rows']}, require <= "
+                     f"{int(want_rows)}) -> {'OK' if rows_ok else 'FAIL'}")
+    print("\n".join(lines))
+    return 0 if ok else 1
+
+
+def main():
+    if "--gate" in sys.argv:
+        sys.exit(gate())
+    if "--smoke" in sys.argv:
+        return run(**SMOKE)
+    return run()
+
+
+if __name__ == "__main__":
+    main()

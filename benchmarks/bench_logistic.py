@@ -87,13 +87,13 @@ def run(m=20_000, k=10, n_trees=20, max_depth=6, n_bins=64, top_rate=0.1,
     full = GradientBoostedTrees(n_trees=n_trees, config=cfg, seed=seed,
                                 loss="logistic")
     full_rows, full_s = _fit_counting(full, table, tr_y)
-    p_full = full.predict(vb)
+    p_full = full.predict_proba(vb)
 
     goss = GradientBoostedTrees(
         n_trees=n_trees, config=cfg, seed=seed, loss="logistic",
         goss=GossConfig(top_rate=top_rate, other_rate=other_rate))
     goss_rows, goss_s = _fit_counting(goss, table, tr_y)
-    p_goss = goss.predict(vb)
+    p_goss = goss.predict_proba(vb)
 
     acc_base = float(max((va_y == 0).mean(), (va_y == 1).mean()))
     tot_full, tot_goss = sum(full_rows), sum(goss_rows)

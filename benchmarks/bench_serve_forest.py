@@ -15,8 +15,11 @@ What the blocking ``serve-gate`` holds instead is everything
 deterministic about the serving layer:
 
   * **routing parity** — every tenant's routed predictions over the
-    mixed-bucket stream are bit-identical to its own ``predict_device``
-    (max |diff| must be exactly 0);
+    mixed-bucket stream are bit-identical to its own link-applied
+    device walk (``predict_proba_device`` for logistic tenants — the
+    routed walk emits sigmoid scores, while the estimator-surface
+    ``predict_device`` thresholds to class ids — ``predict_device`` for
+    regression ones); max |diff| must be exactly 0;
   * **byte accounting** — the packed node-table bytes per request
     (registry.request_cost, a pure function of shapes and dtypes) must
     be <= 0.5x the f32/i32 stacked layout, and must not regress
@@ -123,11 +126,15 @@ def run(m=20_000, k=10, n_bins=64, n_requests=200, seed=0,
     n_rows = sum(r.shape[0] for _, r in stream)
 
     # deterministic routing parity: the whole validation set per tenant,
-    # through the bucketed server, vs the tenant's own fat-table walk
+    # through the bucketed server, vs the tenant's own link-applied walk
+    # (sigmoid scores for logistic tenants — the routed output — not the
+    # thresholded class ids of the estimator-surface predict_device)
     parity = 0.0
     for gbt, vb, mid in zip(fitted, val, mids):
         got = server.predict(mid, vb)
-        want = np.asarray(gbt.predict_device(vb))
+        want = np.asarray(gbt.predict_proba_device(vb)
+                          if gbt.loss == "logistic"
+                          else gbt.predict_device(vb))
         if not np.array_equal(want, got):
             parity = max(parity, float(np.abs(want - got).max()))
 

@@ -16,8 +16,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import bench_selection, bench_udt_cls, bench_udt_reg
-from benchmarks import (bench_dist_goss, bench_goss, bench_kernels,
-                        bench_logistic, bench_serve_forest,
+from benchmarks import (bench_dist_goss, bench_goss, bench_kdd99,
+                        bench_kernels, bench_logistic, bench_serve_forest,
                         bench_subtraction)
 
 
@@ -82,6 +82,14 @@ def main() -> None:
         bench_dist_goss.run()
     else:   # reduced-scale default
         bench_dist_goss.run(m=8_000, k=8, n_trees=8, max_depth=6)
+
+    print("# KDD99 multiclass softmax boosting (writes BENCH_kdd99.json)")
+    if smoke:
+        bench_kdd99.run(**bench_kdd99.SMOKE)
+    elif full:
+        bench_kdd99.run()
+    else:   # reduced-scale default
+        bench_kdd99.run(m=20_000, n_trees=8, max_depth=6)
 
     print("# multi-tenant forest serving (writes BENCH_serve.json)")
     if smoke:

@@ -68,11 +68,15 @@ def main():
     print(f"mixed flush: {p1.result().shape} + {p2.result().shape} rows, "
           f"{server.compile_count} compile(s)")
 
-    # parity: routed output vs each tenant's own device walk, bit-exact
+    # parity: routed output vs each tenant's own link-applied device walk,
+    # bit-exact (the server emits sigmoid scores for logistic tenants, so
+    # the classifier compares on predict_proba_device)
     for name, gbt, bins, mid in (("house-prices", reg, reg_bins, rid),
                                  ("churn", cls, cls_bins, cid)):
         got = server.predict(mid, bins)
-        want = np.asarray(gbt.predict_device(bins))
+        want = np.asarray(gbt.predict_proba_device(bins)
+                          if gbt.loss == "logistic"
+                          else gbt.predict_device(bins))
         assert np.array_equal(want, got), name
         print(f"parity[{name}]: bit-exact over {bins.shape[0]} rows")
 

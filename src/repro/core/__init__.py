@@ -18,12 +18,16 @@ from repro.core.histogram import (node_histogram,  # noqa: F401
 from repro.core.split import (  # noqa: F401
     best_splits, evaluate_predicate, SplitDecision, OP_LE, OP_GT, OP_EQ,
 )
-from repro.core.tree import Tree, TreeConfig, build_tree, BuildState  # noqa: F401
-from repro.core.predict import predict_bins, paths, stack_trees  # noqa: F401
+from repro.core.tree import (  # noqa: F401
+    Tree, TreeConfig, build_tree, build_trees_batched, BuildState,
+)
+from repro.core.predict import (  # noqa: F401
+    predict_bins, paths, stack_trees, walk_class_trees,
+)
 from repro.core.tuning import tune, toot_grid, prune_stats, TuneResult  # noqa: F401
 from repro.core.forest import (  # noqa: F401
     GossConfig, GradientBoostedTrees, RandomForest,
 )
 from repro.core.losses import (  # noqa: F401
-    LogisticLoss, SquaredLoss, get_loss,
+    LogisticLoss, SoftmaxLoss, SquaredLoss, LOSSES, get_loss,
 )

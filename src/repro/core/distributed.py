@@ -70,8 +70,10 @@ from repro import compat
 from repro.compat import shard_map_norep
 from repro.core.binning import BinnedTable
 from repro.core.tree import (Tree, TreeConfig, _auto_chunk_slots, _chunk_step,
-                             _grow, _init_arrays, _node_predicate, _prepare,
-                             _route_step, _subtract_eligible)
+                             _chunk_step_classes, _grow, _grow_batched,
+                             _init_arrays, _node_predicate, _prepare,
+                             _route_step, _route_step_classes,
+                             _subtract_eligible)
 
 __all__ = ["DistConfig", "DistributedBuilder", "build_tree_distributed",
            "make_sharded_step", "make_sharded_sampler", "make_sharded_walk"]
@@ -151,7 +153,7 @@ def _cache_put(cache: dict, key, fn):
 
 def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, num_slots: int,
                       use_sub: bool = False, want_hist: bool = False,
-                      weighted: bool = False):
+                      weighted: bool = False, classes: int = 0):
     """Build (or fetch from the module cache) the shard_map'd level-chunk
     step for a given slot count.
 
@@ -168,16 +170,28 @@ def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, num_slots: int,
     channel of the histogram pass shard-locally, so weighting adds ZERO
     collective bytes.
 
+    ``classes`` > 0 selects the MULTICLASS batched step: per-class operands
+    (targets, assignments, tree arrays, weights, cursor vectors) carry a
+    leading replicated ``[C]`` axis — examples stay sharded over
+    ``dist.data_axes``, so the specs just gain a leading ``None`` — and the
+    per-shard body is ``tree._chunk_step_classes``: the SAME vmapped
+    ``_chunk_step_impl`` as the local batched build, run inside shard_map.
+    Every collective (the histogram psum / tiled psum_scatter, the
+    selection all_gather) batches through its vmap rule per class, so a
+    multiclass round keeps the single-class collective structure at C
+    times the bytes — and ONE compile regardless of C.
+
     This is also what launch/dryrun.py lowers for the UDT rows of the
     roofline table (the paper-technique cell)."""
     cache_key = (mesh, dist, _freeze_kw(kw), num_slots, use_sub, want_hist,
-                 weighted)
+                 weighted, classes)
     hit = _STEP_CACHE.get(cache_key)
     if hit is not None:
         return hit
     dspec = P(dist.data_axes)          # examples
     fspec = P(None, dist.model_axis)   # [M, K] -> features on model axis
     rep = P()
+    cspec = P(None, dist.data_axes)    # [C, M] class-first example rows
 
     d_shards = max(1, int(np.prod([mesh.shape[a] for a in dist.data_axes])))
     # slot_scatter needs the reduce_scattered leading axis to divide the
@@ -187,57 +201,68 @@ def make_sharded_step(mesh: Mesh, dist: DistConfig, kw: dict, num_slots: int,
                   and (not use_sub or (num_slots // 2) % d_shards == 0))
     # the parent cache / cached-level histogram live on the full slot axis;
     # under composition they are additionally sharded over the data axes
-    # (slot-major tiling, matching psum_scatter's tiled order).
+    # (slot-major tiling, matching psum_scatter's tiled order).  The
+    # multiclass variants carry the replicated class axis in front.
     sspec = (P(dist.data_axes, dist.model_axis) if scatter_ok else fspec)
+    sspec_c = (P(None, dist.data_axes, dist.model_axis) if scatter_ok
+               else P(None, None, dist.model_axis))
+    hspec = sspec_c if classes else sspec
     step_kw = dict(kw, num_slots=num_slots, data_axes=dist.data_axes,
                    model_axis=dist.model_axis, slot_scatter=scatter_ok,
                    use_sub=use_sub, want_hist=want_hist, weighted=weighted)
+    inner = _chunk_step_classes if classes else _chunk_step
 
     if weighted:
         def body(bins, stats, lbins, yv, assign, arrays, pp, n_num, n_cat,
                  cs, cn, nf, depth, weights):
-            return _chunk_step(bins, stats, lbins, yv, assign, arrays, pp,
-                               n_num, n_cat, cs, cn, nf, depth,
-                               weights=weights, **step_kw)
+            return inner(bins, stats, lbins, yv, assign, arrays, pp,
+                         n_num, n_cat, cs, cn, nf, depth,
+                         weights=weights, **step_kw)
     else:
         def body(bins, stats, lbins, yv, assign, arrays, pp, n_num, n_cat,
                  cs, cn, nf, depth):
-            return _chunk_step(bins, stats, lbins, yv, assign, arrays, pp,
-                               n_num, n_cat, cs, cn, nf, depth, **step_kw)
+            return inner(bins, stats, lbins, yv, assign, arrays, pp,
+                         n_num, n_cat, cs, cn, nf, depth, **step_kw)
 
+    rspec = cspec if classes else dspec              # per-example rows
     in_specs = (P(dist.data_axes, dist.model_axis),  # bins [M,K]
                 dspec,                               # stats [M,C]
                 dspec,                               # lbins [M]
-                dspec,                               # yv [M]
-                dspec,                               # assign [M]
+                rspec,                               # yv [M] / z [C,M]
+                rspec,                               # assign
                 rep,                                 # tree arrays (replicated)
-                sspec if use_sub else rep,           # parent hist pairs
+                hspec if use_sub else rep,           # parent hist pairs
                 P(dist.model_axis),                  # n_num [K]
                 P(dist.model_axis),                  # n_cat [K]
-                rep, rep, rep, rep)                  # scalars
+                rep, rep, rep, rep)                  # cursors + depth
     if weighted:
-        in_specs = in_specs + (dspec,)               # sample weights [M]
-    out_specs = (rep, rep, sspec if want_hist else rep)
+        in_specs = in_specs + (rspec,)               # sample weights
+    out_specs = (rep, rep, hspec if want_hist else rep)
     sharded = shard_map_norep(body, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs)
     fn = jax.jit(sharded)
     return _cache_put(_STEP_CACHE, cache_key, fn)
 
 
-def make_sharded_route(mesh: Mesh, dist: DistConfig):
-    cache_key = (mesh, dist)
+def make_sharded_route(mesh: Mesh, dist: DistConfig, classes: int = 0):
+    """The sharded level router; ``classes`` > 0 selects the multiclass
+    variant (assign [C, M] class-first, per-class tree arrays and cursor
+    vectors, ``tree._route_step_classes`` inside the shard)."""
+    cache_key = (mesh, dist, classes)
     hit = _ROUTE_CACHE.get(cache_key)
     if hit is not None:
         return hit
+    inner = _route_step_classes if classes else _route_step
 
     def body(bins, assign, arrays, n_num, start, end):
-        return _route_step(bins, assign, arrays, n_num, start, end,
-                           model_axis=dist.model_axis)
+        return inner(bins, assign, arrays, n_num, start, end,
+                     model_axis=dist.model_axis)
 
-    in_specs = (P(dist.data_axes, dist.model_axis), P(dist.data_axes),
+    rspec = P(None, dist.data_axes) if classes else P(dist.data_axes)
+    in_specs = (P(dist.data_axes, dist.model_axis), rspec,
                 P(), P(dist.model_axis), P(), P())
     fn = jax.jit(shard_map_norep(body, mesh=mesh, in_specs=in_specs,
-                                 out_specs=P(dist.data_axes)))
+                                 out_specs=rspec))
     return _cache_put(_ROUTE_CACHE, cache_key, fn)
 
 
@@ -251,7 +276,8 @@ def _data_shard_index(data_axes):
 
 
 def make_sharded_sampler(mesh: Mesh, dist: DistConfig, loss, goss,
-                         m: int, q_top: int, q_oth: int):
+                         m: int, q_top: int, q_oth: int,
+                         weighted: bool = False):
     """Jitted per-round sampling step of the sharded boosting loop.
 
     Returns ``fn(y, raw, key) -> (z, w, assign0)`` over [m_pad] arrays
@@ -260,6 +286,18 @@ def make_sharded_sampler(mesh: Mesh, dist: DistConfig, loss, goss,
     the initial node assignment (0 selected / -1 inert).  With ``goss``
     None every valid row is selected at its hessian weight.
 
+    ``weighted`` appends a sharded [m_pad] sample-weight operand —
+    ``fn(y, raw, key, sw)`` — scaling each row's g and h AFTER the Newton
+    target is formed (z is weight-invariant; the weight rides the h
+    channel and the leverage ranking, mirroring the local loop).
+
+    Multiclass losses (``loss.is_multiclass``) take ``raw`` class-first
+    [C, m_pad] sharded ``P(None, data_axes)`` and return (z, w, assign0)
+    in the same layout: ONE shared row draw per round ranked by the
+    cross-class leverage norm ``sqrt(sum_c g_c^2 h_c)``, each class
+    multiplying its own hessians onto the shared amplification weights —
+    the sharded twin of the local ``_fit_multiclass`` draw.
+
     The GOSS draw is the per-shard-quota scheme described in the module
     docstring: one local ``top_k`` per shard, one scalar ``pmax`` threshold
     merge per data axis, per-shard uniform remainder draws with the exact
@@ -267,15 +305,20 @@ def make_sharded_sampler(mesh: Mesh, dist: DistConfig, loss, goss,
     shapes; deterministic under ``key`` via the data-shard index fold-in.
     """
     from repro.core.forest import _goss_shard_boundary, _goss_shard_weights
-    cache_key = (mesh, dist, loss, goss, m, q_top, q_oth)
+    cache_key = (mesh, dist, loss, goss, m, q_top, q_oth, weighted)
     hit = _SAMPLER_CACHE.get(cache_key)
     if hit is not None:
         return hit
     dspec = P(dist.data_axes)
+    multiclass = getattr(loss, "is_multiclass", False)
+    rspec = P(None, dist.data_axes) if multiclass else dspec
 
-    def body(y, raw, key):
+    def sample(y, raw, key, sw):
         g, h = loss.grad_hess(y, raw)
         z = loss.newton_target(g, h)
+        if sw is not None:
+            # trailing-axis broadcast covers both [m] and [C, m] channels
+            g, h = g * sw, h * sw
         m_loc = y.shape[0]
         idx = _data_shard_index(dist.data_axes)
         rows = idx * m_loc + jnp.arange(m_loc, dtype=jnp.int32)
@@ -283,8 +326,15 @@ def make_sharded_sampler(mesh: Mesh, dist: DistConfig, loss, goss,
         if goss is None:
             w = jnp.where(valid, h, 0.0).astype(jnp.float32)
             assign0 = jnp.where(valid, 0, -1).astype(jnp.int32)
+            if multiclass:
+                assign0 = jnp.broadcast_to(assign0, z.shape)
             return z, w, assign0
-        rank = g if loss.constant_hessian else g * jnp.sqrt(h)
+        if multiclass:
+            rank = jnp.sqrt(jnp.sum(g * g * h, axis=0))
+        elif weighted or not loss.constant_hessian:
+            rank = g * jnp.sqrt(h)
+        else:
+            rank = g
         u = jax.random.uniform(jax.random.fold_in(key, idx), (m_loc,))
         lv = jnp.where(valid, jnp.abs(rank), -1.0)
         u = jnp.where(valid, u, -1.0)
@@ -292,18 +342,33 @@ def make_sharded_sampler(mesh: Mesh, dist: DistConfig, loss, goss,
         for ax in dist.data_axes:
             tau = jax.lax.pmax(tau, ax)
         w_goss = _goss_shard_weights(lv, u, tau, q_top, q_oth)
-        w = (w_goss if loss.constant_hessian else w_goss * h)
-        w = w.astype(jnp.float32)
+        if multiclass:
+            w = (w_goss[None] * h).astype(jnp.float32)
+            assign0 = jnp.broadcast_to(
+                jnp.where(w_goss > 0, 0, -1).astype(jnp.int32), z.shape)
+            return z, w, assign0
+        keep_h = weighted or not loss.constant_hessian
+        w = (w_goss * h if keep_h else w_goss).astype(jnp.float32)
         assign0 = jnp.where(w_goss > 0, 0, -1).astype(jnp.int32)
         return z, w, assign0
 
+    if weighted:
+        def body(y, raw, key, sw):
+            return sample(y, raw, key, sw)
+        in_specs = (dspec, rspec, P(), dspec)
+    else:
+        def body(y, raw, key):
+            return sample(y, raw, key, None)
+        in_specs = (dspec, rspec, P())
+
     fn = jax.jit(shard_map_norep(
-        body, mesh=mesh, in_specs=(dspec, dspec, P()),
-        out_specs=(dspec, dspec, dspec)))
+        body, mesh=mesh, in_specs=in_specs,
+        out_specs=(rspec, rspec, rspec)))
     return _cache_put(_SAMPLER_CACHE, cache_key, fn)
 
 
-def make_sharded_walk(mesh: Mesh, dist: DistConfig, num_steps: int):
+def make_sharded_walk(mesh: Mesh, dist: DistConfig, num_steps: int,
+                      classes: int = 0):
     """Jitted sharded raw-score update: ``fn(raw, arrays, bins, n_num, lr)``
     returns ``raw + lr * leaf_label`` with the Algorithm-7 walk evaluated on
     the (data, model)-sharded bins.
@@ -314,14 +379,20 @@ def make_sharded_walk(mesh: Mesh, dist: DistConfig, num_steps: int):
     feature-parallel predicate the level router uses (one psum'd bit per
     example over the model axis) — so the raw scores never leave their
     data shard and the boosting loop's score state stays device-resident
-    across rounds."""
-    cache_key = (mesh, dist, num_steps)
+    across rounds.
+
+    ``classes`` > 0 selects the multiclass variant: ``raw`` is class-first
+    [C, m_pad] (``P(None, data_axes)``), ``arrays`` carries the [C,
+    max_nodes] stacked class-trees of one round, and the walk vmaps over
+    the class axis — the sharded twin of ``predict.walk_class_trees``."""
+    cache_key = (mesh, dist, num_steps, classes)
     hit = _WALK_CACHE.get(cache_key)
     if hit is not None:
         return hit
     dspec = P(dist.data_axes)
+    rspec = P(None, dist.data_axes) if classes else dspec
 
-    def body(raw, arrays, bins, n_num, lr):
+    def walk_one(raw, arrays, bins, n_num, lr):
         node0 = jnp.zeros((bins.shape[0],), dtype=jnp.int32)
 
         def step(_, node):
@@ -336,10 +407,17 @@ def make_sharded_walk(mesh: Mesh, dist: DistConfig, num_steps: int):
         node = jax.lax.fori_loop(0, num_steps, step, node0)
         return raw + lr * arrays["label"][node]
 
-    in_specs = (dspec, P(), P(dist.data_axes, dist.model_axis),
+    if classes:
+        def body(raw, arrays, bins, n_num, lr):
+            return jax.vmap(
+                lambda r, ar: walk_one(r, ar, bins, n_num, lr))(raw, arrays)
+    else:
+        body = walk_one
+
+    in_specs = (rspec, P(), P(dist.data_axes, dist.model_axis),
                 P(dist.model_axis), P())
     fn = jax.jit(shard_map_norep(body, mesh=mesh, in_specs=in_specs,
-                                 out_specs=dspec))
+                                 out_specs=rspec))
     return _cache_put(_WALK_CACHE, cache_key, fn)
 
 
@@ -433,6 +511,18 @@ class DistributedBuilder:
             _pad_to(np.asarray(x, dtype), self.d_shards, 0, fill),
             self._rows)
 
+    def _stage_class_rows(self, x, fill, dtype):
+        """Shard a class-first [C, m] matrix over the data axes with the
+        class axis replicated (``P(None, data_axes)`` — the multiclass
+        training layout); host input is padded to [C, m_pad] here, an
+        already-padded device array (the sharded multiclass round loop)
+        is just re-placed."""
+        spec = NamedSharding(self.mesh, P(None, self.dist.data_axes))
+        if isinstance(x, jax.Array) and x.shape[-1] == self.m_pad:
+            return jax.device_put(x.astype(dtype), spec)
+        return jax.device_put(
+            _pad_to(np.asarray(x, dtype), self.d_shards, 1, fill), spec)
+
     def build(self, y, sample_weight=None, assign=None,
               level_callback=None) -> Tree:
         """Build one tree.  ``y`` / ``sample_weight`` / ``assign`` are host
@@ -504,6 +594,83 @@ class DistributedBuilder:
                                 subtract=subtract,
                                 max_depth=config.max_depth)
         return Tree(n_nodes=n_nodes, **arrays)
+
+    def build_batched(self, z, sample_weight=None, assign=None,
+                      level_callback=None):
+        """Build one ``regression_variance`` tree per row of ``z`` [C, m]
+        through ONE vmapped sharded level-synchronous build — the mesh
+        twin of ``core.tree.build_trees_batched`` (a multiclass boosting
+        round's K class-trees for one compile and one sharded step per
+        level chunk).
+
+        ``z`` / ``sample_weight`` / ``assign`` are host [C, m] arrays or
+        sharded [C, m_pad] device arrays in the class-first
+        ``P(None, data_axes)`` layout (the sharded multiclass sampler's
+        outputs feed in unchanged).  Returns ``(trees, arrays)`` exactly
+        like the local batched build: per-class ``Tree`` views plus the
+        stacked [C, max_nodes] arrays the batched score-update walk
+        (``make_sharded_walk(classes=C)``) consumes directly."""
+        config, dist, mesh = self.config, self.dist, self.mesh
+        if config.task != "regression_variance":
+            raise ValueError("build_batched fits 'regression_variance' "
+                             "trees (the boosting round task); got task="
+                             f"{config.task!r}")
+        weighted = sample_weight is not None
+        z_d = self._stage_class_rows(z, 0.0, np.float32)
+        n_stack = int(z_d.shape[0])
+        w_d = (self._stage_class_rows(sample_weight, 0.0, np.float32)
+               if weighted else None)
+        assign_d = (self._stage_class_rows(assign, -1, np.int32)
+                    if assign is not None
+                    else self._stage_class_rows(
+                        np.broadcast_to(self._assign0,
+                                        (n_stack, self.m_pad)), -1, np.int32))
+
+        kw = dict(n_bins=self.b, heuristic=config.heuristic, task=config.task,
+                  min_samples_split=config.min_samples_split,
+                  min_samples_leaf=config.min_samples_leaf,
+                  max_depth=config.max_depth, max_nodes=self.max_nodes,
+                  hist_backend=config.hist_backend,
+                  select_backend=config.select_backend, n_label_bins=1,
+                  min_child_weight=config.min_child_weight)
+        subtract = (((self.k_pad // self.f_shards) * self.b * 3 * 4,
+                     config.sub_cache_bytes)
+                    if _subtract_eligible(config, self.m, weighted)
+                    else None)
+        arrays = {k_: jnp.broadcast_to(v[None], (n_stack,) + v.shape)
+                  for k_, v in _init_arrays(self.max_nodes).items()}
+        dummy_pp = jnp.zeros((n_stack, 1, 1, 1, 1), dtype=jnp.float32)
+
+        def step(arrays_, assign_, cs, cn, next_free, depth, num_slots, pp,
+                 use_sub, want_hist):
+            fn = make_sharded_step(mesh, dist, kw, num_slots, use_sub,
+                                   want_hist, weighted, classes=n_stack)
+            args = [self.bins_d, self._stats_d, self._lbins_d, z_d, assign_,
+                    arrays_, pp if use_sub else dummy_pp, self.n_num_d,
+                    self.n_cat_d, jnp.asarray(cs, dtype=jnp.int32),
+                    jnp.asarray(cn, dtype=jnp.int32),
+                    jnp.asarray(next_free, dtype=jnp.int32),
+                    jnp.int32(depth)]
+            if weighted:
+                args.append(w_d)
+            return fn(*args)
+
+        route_fn = make_sharded_route(mesh, dist, classes=n_stack)
+
+        def route(assign_, arrays_, start, end):
+            return route_fn(self.bins_d, assign_, arrays_, self.n_num_d,
+                            jnp.asarray(start, dtype=jnp.int32),
+                            jnp.asarray(end, dtype=jnp.int32))
+
+        arrays, n_nodes = _grow_batched(step, route, arrays, assign_d,
+                                        self.s_cap, self.max_nodes,
+                                        level_callback, n_stack,
+                                        subtract=subtract,
+                                        max_depth=config.max_depth)
+        trees = [Tree(n_nodes=int(n_nodes[c]),
+                      **{k_: v[c] for k_, v in arrays.items()})
+                 for c in range(n_stack)]
+        return trees, arrays
 
 
 def build_tree_distributed(table: BinnedTable, y,

@@ -61,6 +61,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -68,8 +69,10 @@ import numpy as np
 
 from repro.core.binning import BinnedTable
 from repro.core.losses import get_loss
-from repro.core.predict import WALK_FIELDS, _walk, predict_bins, stack_trees
-from repro.core.tree import Tree, TreeConfig, build_tree
+from repro.core.predict import (WALK_FIELDS, _walk, predict_bins,
+                                stack_trees, walk_class_trees)
+from repro.core.tree import (Tree, TreeConfig, build_tree,
+                             build_trees_batched)
 
 __all__ = ["RandomForest", "GradientBoostedTrees", "GossConfig",
            "goss_sample_sharded_ref"]
@@ -85,21 +88,20 @@ def _subsample_table(table: BinnedTable, feat_mask: np.ndarray) -> BinnedTable:
 
 
 @functools.partial(jax.jit, static_argnames=("num_steps", "n_classes"))
-def _forest_vote(stacked, n_nums, bins, *, num_steps, n_classes):
-    """Batched Algorithm-7 walk + majority vote for the whole forest: one
+def _forest_votes(stacked, n_nums, bins, *, num_steps, n_classes):
+    """Batched Algorithm-7 walk + vote counts for the whole forest: one
     vmap over the stacked [T, max_nodes] tree arrays AND the per-tree
     feature masks (n_num differs per tree under feature subsampling), one
-    [M, C] one-hot vote reduction, one argmax — callers transfer the [M]
-    class vector once.  Integer vote counts are exact in f32 and argmax
-    takes the first maximum, so this reproduces the per-tree host loop bit
-    for bit."""
+    [M, C] one-hot vote reduction — callers transfer the [M, C] counts (or
+    their argmax) once.  Integer vote counts are exact in f32 and argmax
+    takes the first maximum, so class predictions reproduce the per-tree
+    host loop bit for bit."""
     no_limit = jnp.int32(1 << 30)
     per_tree = jax.vmap(
         lambda ta, nn: _walk(ta, bins, nn, no_limit, jnp.int32(0),
                              num_steps=num_steps))(stacked, n_nums)  # [T, M]
-    votes = jax.nn.one_hot(per_tree.astype(jnp.int32), n_classes,
-                           dtype=jnp.float32).sum(axis=0)           # [M, C]
-    return jnp.argmax(votes, axis=1).astype(jnp.int32)
+    return jax.nn.one_hot(per_tree.astype(jnp.int32), n_classes,
+                          dtype=jnp.float32).sum(axis=0)            # [M, C]
 
 
 @dataclasses.dataclass
@@ -111,18 +113,41 @@ class RandomForest:
         default_factory=lambda: TreeConfig(max_depth=24))
     seed: int = 0
 
-    def fit(self, table: BinnedTable, y, n_classes: int):
+    def fit(self, table: BinnedTable, y, n_classes: int | None = None, *,
+            sample_weight=None, level_callback=None, mesh=None, dist=None):
+        """Fit the forest on int class labels ``y``.
+
+        The unified estimator signature (shared with GradientBoostedTrees):
+        everything after ``y`` is keyword-only — ``sample_weight`` ([M]
+        f32, entering each tree's weight channel under the bootstrap),
+        ``level_callback`` (per-level BuildState hook), and ``mesh`` /
+        ``dist`` (each tree built by ``build_tree_distributed`` over the
+        mesh).  ``n_classes`` is inferred from the labels; passing it
+        positionally still works as a one-release deprecation shim.
+        """
+        if n_classes is not None:
+            warnings.warn(
+                "passing n_classes to RandomForest.fit is deprecated and "
+                "will be removed in the next release; it is now inferred "
+                "from the labels", DeprecationWarning, stacklevel=2)
         # drop the stacked-walk cache FIRST: a refit that fails midway must
         # never leave predict serving the previous fit's trees
         self._stacked = None            # predict's lazy stacked-walk cache
         rng = np.random.default_rng(self.seed)
         m, k = table.bins.shape
-        self.n_classes = n_classes
+        y = np.asarray(y)
+        self.n_classes = (int(n_classes) if n_classes is not None
+                          else int(y.max()) + 1)
+        sw = (np.asarray(sample_weight, dtype=np.float32)
+              if sample_weight is not None else None)
+        if mesh is not None:
+            from repro.core.distributed import (DistConfig,
+                                                build_tree_distributed)
+            dist = dist if dist is not None else DistConfig()
         self.trees: list[Tree] = []
         # predict only needs each tree's feature mask (n_num); retaining the
         # bootstrapped [M, K] bins per tree was an M*K*T memory leak.
         self.n_nums: list[np.ndarray] = []
-        y = np.asarray(y)
         for _ in range(self.n_trees):
             fm = rng.uniform(size=k) < self.max_features
             if not fm.any():
@@ -133,30 +158,59 @@ class RandomForest:
                 sub = BinnedTable(bins=sub.bins[idx], n_num=sub.n_num,
                                   n_cat=sub.n_cat, metas=sub.metas,
                                   n_bins=sub.n_bins)
-                yy = y[idx]
+                yy, ww = y[idx], (sw[idx] if sw is not None else None)
             else:
-                yy = y
-            self.trees.append(build_tree(sub, yy, self.config,
-                                         n_classes=n_classes))
+                yy, ww = y, sw
+            if mesh is not None:
+                tree = build_tree_distributed(
+                    sub, yy, self.config, mesh=mesh, dist=dist,
+                    n_classes=self.n_classes, sample_weight=ww,
+                    level_callback=level_callback)
+            else:
+                tree = build_tree(sub, yy, self.config,
+                                  n_classes=self.n_classes,
+                                  sample_weight=ww,
+                                  level_callback=level_callback)
+            self.trees.append(tree)
             self.n_nums.append(sub.n_num)
         return self
 
-    def predict_device(self, bins) -> jax.Array:
-        """Majority-vote class ids as a device Array (no host transfer).
-        The stacked [T, max_nodes] tree arrays and [T, K] feature masks are
-        built once on first use (trees are immutable after fit)."""
+    def _votes(self, bins) -> jax.Array:
         if getattr(self, "_stacked", None) is None:
             self._stacked = (
                 stack_trees(self.trees),
                 jnp.stack([jnp.asarray(nn) for nn in self.n_nums]),
                 max(1, max(t.max_tree_depth for t in self.trees)))
         stacked, n_nums, steps = self._stacked
-        return _forest_vote(stacked, n_nums, jnp.asarray(bins),
-                            num_steps=steps, n_classes=self.n_classes)
+        return _forest_votes(stacked, n_nums, jnp.asarray(bins),
+                             num_steps=steps, n_classes=self.n_classes)
+
+    # -- the unified predict triple (device + host variants) ---------------
+    def predict_raw_device(self, bins) -> jax.Array:
+        """Per-class vote COUNTS [M, C] as a device Array — the forest's
+        raw score.  The stacked [T, max_nodes] tree arrays and [T, K]
+        feature masks are built once on first use (trees are immutable
+        after fit)."""
+        return self._votes(bins)
+
+    def predict_proba_device(self, bins) -> jax.Array:
+        """Vote FRACTIONS [M, C] (counts / n_trees) as a device Array."""
+        return self._votes(bins) / jnp.float32(self.n_trees)
+
+    def predict_device(self, bins) -> jax.Array:
+        """Majority-vote class ids [M] as a device Array (argmax of the
+        vote counts; ties go to the lowest class id)."""
+        return jnp.argmax(self._votes(bins), axis=1).astype(jnp.int32)
+
+    def predict_raw(self, bins):
+        return np.asarray(self.predict_raw_device(bins))
+
+    def predict_proba(self, bins):
+        return np.asarray(self.predict_proba_device(bins))
 
     def predict(self, bins):
-        """Batched forest prediction; ONE device->host transfer for the
-        whole forest (the per-tree transfer loop was the old hot spot)."""
+        """Batched forest prediction (class ids [M]); ONE device->host
+        transfer for the whole forest."""
         return np.asarray(self.predict_device(bins))
 
 
@@ -358,6 +412,23 @@ def _ensemble_predict(stacked, bins, n_num, lr, base, *, num_steps):
     return base + lr * per_tree.sum(axis=0)
 
 
+@functools.partial(jax.jit, static_argnames=("num_steps", "n_classes"))
+def _ensemble_predict_multiclass(stacked, bins, n_num, lr, base, *,
+                                 num_steps, n_classes):
+    """Multiclass twin of ``_ensemble_predict``: the stacked [R*C,
+    max_nodes] arrays hold R rounds of C class-trees round-major (the
+    order ``fit`` appends them), so one vmapped walk + a [R, C, M]
+    reshape-reduce yields the per-class raw scores.  Returns CLASS-LAST
+    [M, C] — the prediction-surface layout (core.losses module docs)."""
+    no_limit = jnp.int32(1 << 30)
+    per_tree = jax.vmap(
+        lambda ta: _walk(ta, bins, n_num, no_limit, jnp.int32(0),
+                         num_steps=num_steps))(stacked)        # [R*C, M]
+    per_class = per_tree.reshape(-1, n_classes,
+                                 per_tree.shape[1]).sum(axis=0)  # [C, M]
+    return (base[:, None] + lr * per_class).T                    # [M, C]
+
+
 @dataclasses.dataclass
 class GradientBoostedTrees:
     """Newton-step gradient boosting with variance-split UDTs.
@@ -379,8 +450,24 @@ class GradientBoostedTrees:
     subset with the exact ``(1-a)/b`` weight channel multiplied onto the
     hessian weights (see GossConfig); tree shapes are static across
     rounds, so the whole ensemble reuses one compiled build + one compiled
-    predict step.  ``predict`` / ``predict_device`` apply the loss's link
-    on device: probabilities for "logistic", raw values for "squared".
+    predict step.
+
+    ``loss="softmax"`` (or ``SoftmaxLoss(n_classes)``) opens MULTICLASS
+    boosting: raw scores become class-first [C, M], each round fits one
+    tree per class on its ``(z_c, h_c)`` channel, and the K class-trees of
+    a round are batched through ONE vmapped build
+    (core.tree.build_trees_batched) against the shared binned table — a
+    round costs ~one build and exactly one compiled level step, not K.
+    Under GOSS the round's shared row draw ranks by the cross-class
+    leverage norm ``sqrt(sum_c g_c^2 h_c)`` and each class multiplies its
+    own hessians onto the shared amplification weights.
+
+    The predict surface is the unified triple (device + host variants):
+    ``predict_raw`` — raw scores ([M], or class-last [M, C] for softmax);
+    ``predict_proba`` — link-applied probabilities ([M] sigmoid for
+    "logistic", [M, C] softmax; rejected for regression losses);
+    ``predict`` — class ids for classification losses, raw values for
+    regression.
     """
     n_trees: int = 20
     learning_rate: float = 0.3
@@ -391,21 +478,39 @@ class GradientBoostedTrees:
     loss: str = "squared"
     seed: int = 0
 
-    def fit(self, table: BinnedTable, y, level_callback=None, *,
-            mesh=None, dist=None):
-        """Fit the ensemble.  With ``mesh`` set the whole round loop runs
-        sharded over ``dist.data_axes`` / ``dist.model_axis`` (see
-        ``_fit_sharded`` and core.distributed): same API, same trees up to
-        the documented weighted-moment tolerance."""
+    def _resolve_loss(self, y):
+        """``get_loss`` on ``self.loss``; the bare name "softmax" infers
+        ``n_classes`` from the labels (pass ``SoftmaxLoss(n_classes=...)``
+        or ``get_loss("softmax", n_classes=...)`` to pin it)."""
+        if isinstance(self.loss, str) and self.loss == "softmax":
+            return get_loss(self.loss, n_classes=int(np.asarray(y).max()) + 1)
+        return get_loss(self.loss)
+
+    def fit(self, table: BinnedTable, y, *, sample_weight=None,
+            level_callback=None, mesh=None, dist=None):
+        """Fit the ensemble (unified estimator signature: everything after
+        ``y`` is keyword-only).  ``sample_weight`` ([M] f32) scales each
+        example's gradient and hessian — it rides the weight channel, so
+        the Newton target stays invariant while every fitted statistic
+        becomes its weighted estimate.  With ``mesh`` set the whole round
+        loop runs sharded over ``dist.data_axes`` / ``dist.model_axis``
+        (see ``_fit_sharded`` and core.distributed): same API, same trees
+        up to the documented weighted-moment tolerance."""
         # drop the stacked-walk cache FIRST: a refit that fails midway must
         # never leave predict serving the previous fit's trees
         self._stacked = None                    # predict_device's lazy cache
+        lo = self._loss = self._resolve_loss(y)
         if mesh is not None:
-            return self._fit_sharded(table, y, mesh, dist, level_callback)
-        lo = self._loss = get_loss(self.loss)
+            return self._fit_sharded(table, y, mesh, dist, level_callback,
+                                     sample_weight)
+        if getattr(lo, "is_multiclass", False):
+            return self._fit_multiclass(table, y, lo, sample_weight,
+                                        level_callback)
         bins = jnp.asarray(table.bins)
         m = bins.shape[0]
         y = jnp.asarray(y, dtype=jnp.float32)
+        sw = (jnp.asarray(sample_weight, dtype=jnp.float32)
+              if sample_weight is not None else None)
         base = lo.base_score(y)
         self.n_num = np.asarray(table.n_num)
         n_num_d = jnp.asarray(self.n_num)
@@ -419,18 +524,24 @@ class GradientBoostedTrees:
         num_steps = max(1, self.config.max_depth)
         for _ in range(self.n_trees):
             g, h = lo.grad_hess(y, raw)
+            # a row weight scales g and h alike, so the Newton target is
+            # weight-invariant; the weight enters through the h channel
+            # (and the leverage ranking) only.
             z = lo.newton_target(g, h)
+            if sw is not None:
+                g, h = g * sw, h * sw
+            use_w = sw is not None or not lo.constant_hessian
             if self.goss is None:
                 tree = build_tree(
                     dev_table, z, self.config,
-                    sample_weight=None if lo.constant_hessian else h,
+                    sample_weight=h if use_w else None,
                     level_callback=level_callback)
             else:
                 key, sub = jax.random.split(key)
-                rank = g if lo.constant_hessian else g * jnp.sqrt(h)
+                rank = g * jnp.sqrt(h) if use_w else g
                 idx, w = _goss_sample(rank, sub, top_n=top_n,
                                       other_n=other_n, amp=amp)
-                if not lo.constant_hessian:
+                if use_w:
                     w = w * jnp.take(h, idx)    # GOSS amp x hessian weight
                 sub_table = dataclasses.replace(
                     table, bins=jnp.take(bins, idx, axis=0))
@@ -445,8 +556,71 @@ class GradientBoostedTrees:
         self.base = float(base)                 # one scalar sync at the end
         return self
 
+    def _fit_multiclass(self, table: BinnedTable, y, lo, sample_weight,
+                        level_callback):
+        """The softmax round loop: raw scores are class-first [C, M], each
+        round's per-class gradients/hessians come from ONE ``grad_hess``
+        over the class axis, and the K class-trees are built by ONE
+        vmapped ``build_trees_batched`` call — the round costs ~one build
+        and one compiled level step regardless of C.  The score update
+        walks all K class-trees in one vmapped pass
+        (``predict.walk_class_trees``) straight off the builder's stacked
+        arrays; trees are appended round-major (round r's class-c tree at
+        index ``r * C + c``), the layout the stacked multiclass predict
+        reshapes by."""
+        bins = jnp.asarray(table.bins)
+        m = bins.shape[0]
+        n_classes = lo.n_classes
+        y_i = jnp.asarray(y, dtype=jnp.int32)
+        sw = (jnp.asarray(sample_weight, dtype=jnp.float32)
+              if sample_weight is not None else None)
+        base = lo.base_score(y_i)               # [C] class log-priors
+        self.n_num = np.asarray(table.n_num)
+        n_num_d = jnp.asarray(self.n_num)
+        dev_table = dataclasses.replace(table, bins=bins)
+        raw = jnp.broadcast_to(base[:, None], (n_classes, m))
+        key = jax.random.PRNGKey(self.seed)
+        if self.goss is not None:
+            top_n, other_n = self.goss.sample_sizes(m)
+            amp = self.goss.amplification
+        self.trees: list[Tree] = []
+        num_steps = max(1, self.config.max_depth)
+        lr = jnp.float32(self.learning_rate)
+        for _ in range(self.n_trees):
+            g, h = lo.grad_hess(y_i, raw)       # [C, M] each
+            z = lo.newton_target(g, h)
+            if sw is not None:
+                g, h = g * sw[None], h * sw[None]
+            if self.goss is None:
+                round_trees, arrays = build_trees_batched(
+                    dev_table, z, self.config, sample_weight=h,
+                    level_callback=level_callback)
+            else:
+                # ONE shared row draw per round (all class-trees see the
+                # same sampled rows — one subset gather, one build shape),
+                # ranked by the cross-class Newton leverage norm
+                # sqrt(sum_c g_c^2 h_c) = the L2 norm of the per-class
+                # |g_c| sqrt(h_c) leverages; each class then multiplies
+                # its own hessians onto the shared amplification weights.
+                key, sub = jax.random.split(key)
+                rank = jnp.sqrt(jnp.sum(g * g * h, axis=0))
+                idx, w = _goss_sample(rank, sub, top_n=top_n,
+                                      other_n=other_n, amp=amp)
+                sub_table = dataclasses.replace(
+                    table, bins=jnp.take(bins, idx, axis=0))
+                round_trees, arrays = build_trees_batched(
+                    sub_table, jnp.take(z, idx, axis=1), self.config,
+                    sample_weight=w[None] * jnp.take(h, idx, axis=1),
+                    level_callback=level_callback)
+            self.trees.extend(round_trees)
+            raw = raw + lr * walk_class_trees(
+                {f: arrays[f] for f in WALK_FIELDS}, bins, n_num_d,
+                num_steps=num_steps)
+        self.base = np.asarray(base, dtype=np.float32)   # [C], one sync
+        return self
+
     def _fit_sharded(self, table: BinnedTable, y, mesh, dist,
-                     level_callback):
+                     level_callback, sample_weight=None):
         """The mesh-wide round loop: every per-round array — raw scores,
         gradients/hessians, the leverage ranking, the GOSS draw, the build
         weights and the score update — is a device Array sharded with
@@ -459,7 +633,15 @@ class GradientBoostedTrees:
         in-kernel channel shard-locally; and the full-data score update
         walks the (data, model)-sharded bins feature-parallel
         (``make_sharded_walk``).  Host traffic per round is only the
-        builder's level-loop scalars."""
+        builder's level-loop scalars.
+
+        Multiclass (softmax): raw scores are class-first [C, m_pad]
+        sharded ``P(None, data_axes)`` — the class axis is replicated, the
+        example axis sharded — the sampler emits per-class ``(z, w)``
+        channels off ONE shared row draw, and the K class-trees are built
+        by ``DistributedBuilder.build_batched``: the SAME vmapped level
+        step as the local multiclass build, run inside shard_map, so a
+        round costs one sharded build and one compile regardless of C."""
         from repro.core.distributed import (DistConfig, DistributedBuilder,
                                             make_sharded_sampler,
                                             make_sharded_walk)
@@ -468,58 +650,129 @@ class GradientBoostedTrees:
                              "'regression_variance' trees; got task="
                              f"{self.config.task!r}")
         dist = dist if dist is not None else DistConfig()
-        lo = self._loss = get_loss(self.loss)
+        lo = self._loss
+        multiclass = getattr(lo, "is_multiclass", False)
         y_np = np.asarray(y, dtype=np.float32)
         m = y_np.shape[0]
-        base = float(lo.base_score(jnp.asarray(y_np)))
         builder = DistributedBuilder(table, self.config, mesh=mesh,
                                      dist=dist)
         y_d = builder._stage_rows(y_np, 0.0, np.float32)
-        raw = builder._stage_rows(np.full(builder.m_pad, base, np.float32),
-                                  0.0, np.float32)
+        sw_d = (builder._stage_rows(
+                    np.asarray(sample_weight, dtype=np.float32), 0.0,
+                    np.float32)
+                if sample_weight is not None else None)
+        if multiclass:
+            base = np.asarray(lo.base_score(jnp.asarray(y_np)),
+                              dtype=np.float32)          # [C] log-priors
+            raw = builder._stage_class_rows(
+                np.broadcast_to(base[:, None],
+                                (lo.n_classes, builder.m_pad)),
+                0.0, np.float32)
+        else:
+            base = float(lo.base_score(jnp.asarray(y_np)))
+            raw = builder._stage_rows(
+                np.full(builder.m_pad, base, np.float32), 0.0, np.float32)
         q_top, q_oth = ((0, 0) if self.goss is None
                         else self.goss.shard_quota(m, builder.d_shards))
         sampler = make_sharded_sampler(mesh, dist, lo, self.goss, m,
-                                       q_top, q_oth)
+                                       q_top, q_oth,
+                                       weighted=sw_d is not None)
         num_steps = max(1, self.config.max_depth)
-        walk = make_sharded_walk(mesh, dist, num_steps)
+        walk = make_sharded_walk(mesh, dist, num_steps,
+                                 classes=lo.n_classes if multiclass else 0)
         lr = jnp.float32(self.learning_rate)
         key = jax.random.PRNGKey(self.seed)
         self.n_num = np.asarray(table.n_num)
         self.trees: list[Tree] = []
+        use_w = (self.goss is not None or not lo.constant_hessian
+                 or sw_d is not None)
         for _ in range(self.n_trees):
             key, sub = jax.random.split(key)
-            z, w, assign0 = sampler(y_d, raw, sub)
-            use_w = self.goss is not None or not lo.constant_hessian
-            tree = builder.build(z, sample_weight=w if use_w else None,
-                                 assign=assign0,
-                                 level_callback=level_callback)
-            self.trees.append(tree)
-            raw = walk(raw, {f: getattr(tree, f) for f in WALK_FIELDS},
-                       builder.bins_d, builder.n_num_d, lr)
+            args = (y_d, raw, sub) + ((sw_d,) if sw_d is not None else ())
+            z, w, assign0 = sampler(*args)
+            if multiclass:
+                round_trees, arrays = builder.build_batched(
+                    z, sample_weight=w if use_w else None, assign=assign0,
+                    level_callback=level_callback)
+                self.trees.extend(round_trees)
+                raw = walk(raw, {f: arrays[f] for f in WALK_FIELDS},
+                           builder.bins_d, builder.n_num_d, lr)
+            else:
+                tree = builder.build(z, sample_weight=w if use_w else None,
+                                     assign=assign0,
+                                     level_callback=level_callback)
+                self.trees.append(tree)
+                raw = walk(raw, {f: getattr(tree, f) for f in WALK_FIELDS},
+                           builder.bins_d, builder.n_num_d, lr)
         self.base = base
         return self
 
-    def predict_device(self, bins) -> jax.Array:
-        """Link-applied ensemble prediction as a device Array (no host
-        transfer).  The stacked [T, max_nodes] tree arrays AND the device
+    def _fitted_loss(self):
+        """The loss INSTANCE the fit ran with (``fit`` caches it as
+        ``self._loss`` — for softmax that carries the inferred n_classes);
+        falls back to resolving ``self.loss`` for unfitted estimators."""
+        lo = getattr(self, "_loss", None)
+        return lo if lo is not None else get_loss(self.loss)
+
+    def predict_raw_device(self, bins) -> jax.Array:
+        """Raw (pre-link) ensemble scores as a device Array: [M] additive
+        scores for scalar losses, class-last [M, C] softmax logits for
+        multiclass.  The stacked [T, max_nodes] tree arrays AND the device
         copy of the feature mask ``n_num`` are built once on first use
         (trees are immutable after fit; re-converting n_num per call was a
         per-batch host->device transfer), so a serving loop pays only the
-        jitted walk + link per batch."""
+        jitted walk per batch."""
         if getattr(self, "_stacked", None) is None:
             self._stacked = (stack_trees(self.trees), jnp.asarray(self.n_num))
         stacked, n_num_d = self._stacked
-        raw = _ensemble_predict(
+        lo = self._fitted_loss()
+        num_steps = max(1, self.config.max_depth)
+        if getattr(lo, "is_multiclass", False):
+            return _ensemble_predict_multiclass(
+                stacked, jnp.asarray(bins), n_num_d,
+                jnp.float32(self.learning_rate), jnp.asarray(self.base),
+                num_steps=num_steps, n_classes=lo.n_classes)       # [M, C]
+        return _ensemble_predict(
             stacked, jnp.asarray(bins), n_num_d,
             jnp.float32(self.learning_rate), jnp.float32(self.base),
-            num_steps=max(1, self.config.max_depth))
-        return getattr(self, "_loss", get_loss(self.loss)).link(raw)
+            num_steps=num_steps)                                   # [M]
+
+    def predict_proba_device(self, bins) -> jax.Array:
+        """Link-applied class probabilities as a device Array: [M] sigmoid
+        P(y=1) for the logistic loss, [M, C] softmax for multiclass.
+        Rejected for regression losses (identity link, link_id 0) — raw
+        scores are not probabilities; use ``predict``/``predict_raw``."""
+        lo = self._fitted_loss()
+        if lo.link_id == 0:
+            raise ValueError(
+                f"loss {lo.name!r} is a regression objective (identity "
+                "link); it has no class probabilities — use predict / "
+                "predict_raw")
+        return lo.link(self.predict_raw_device(bins))
+
+    def predict_device(self, bins) -> jax.Array:
+        """The estimator's prediction as a device Array: class ids [M]
+        int32 for classification losses (argmax over softmax classes; the
+        decision threshold raw > 0 <=> p > 0.5 for logistic), raw values
+        [M] for regression."""
+        raw = self.predict_raw_device(bins)
+        lo = self._fitted_loss()
+        if getattr(lo, "is_multiclass", False):
+            return jnp.argmax(raw, axis=1).astype(jnp.int32)
+        if lo.link_id == 1:
+            return (raw > 0).astype(jnp.int32)
+        return raw
+
+    def predict_raw(self, bins):
+        return np.asarray(self.predict_raw_device(bins))
+
+    def predict_proba(self, bins):
+        return np.asarray(self.predict_proba_device(bins))
 
     def predict(self, bins):
         """Batched ensemble prediction; ONE device->host transfer for the
         whole forest (the per-tree transfer loop was the old hot spot).
-        Returns link-applied values: P(y=1) for the logistic loss."""
+        Class ids for classification losses, raw values for regression."""
         return np.asarray(self.predict_device(bins))
 
     def export_stacked(self):
@@ -532,17 +785,24 @@ class GradientBoostedTrees:
             ``predict_device`` walks),
           * ``n_num`` — the ``[K]`` numeric-bin-count feature mask,
           * ``meta`` — the serving scalars: ``learning_rate``, ``base``
-            (the raw base score F0), ``link_id`` (core.losses serving ABI:
-            0 identity / 1 sigmoid), ``num_steps`` (the static walk bound
-            ``max(1, config.max_depth)`` that ``predict_device`` uses) and
-            ``loss`` (the loss name, informational).
+            (the raw base score F0 — a float, or the [C] log-prior list
+            for softmax), ``link_id`` (core.losses serving ABI: 0 identity
+            / 1 sigmoid / 2 softmax — the registry currently REJECTS id 2,
+            see serve.registry), ``n_classes`` (1 for scalar losses),
+            ``num_steps`` (the static walk bound ``max(1,
+            config.max_depth)`` that ``predict_device`` uses) and ``loss``
+            (the loss name, informational).
 
         The serve layer packs these tables into the narrow int8/int16
         node-record layout (serve.pack) and concatenates tenants along a
         model axis (serve.registry); routed serving predictions are
         bit-identical to ``predict_device`` on the same rows (tested)."""
-        lo = get_loss(self.loss)
+        lo = self._fitted_loss()
+        multiclass = getattr(lo, "is_multiclass", False)
+        base = ([float(b) for b in np.asarray(self.base)] if multiclass
+                else float(self.base))
         return (stack_trees(self.trees), np.asarray(self.n_num),
                 dict(learning_rate=float(self.learning_rate),
-                     base=float(self.base), link_id=int(lo.link_id),
+                     base=base, link_id=int(lo.link_id),
+                     n_classes=int(lo.n_classes) if multiclass else 1,
                      num_steps=max(1, self.config.max_depth), loss=lo.name))

@@ -37,15 +37,42 @@ float-tolerance contract of core.tree._subtract_eligible.  Losses with
 entirely when unsampled, so the pre-existing squared-loss path traces —
 and fits — bit-identically to before the refactor.
 
-Serving
--------
-Each loss also carries an integer ``link_id`` (0 = identity, 1 = sigmoid).
+Multiclass (softmax) boosting
+-----------------------------
+``SoftmaxLoss(n_classes)`` generalises the scheme to K-vs-all: the raw
+score becomes one channel per class, carried CLASS-FIRST ``[C, M]``
+through the training loop (the class axis is the vmapped batch axis of
+the per-round K-tree build, core.tree.build_trees_batched) and exposed
+CLASS-LAST ``[M, C]`` on the prediction surface.  Per class the pieces
+are exactly the logistic ones applied to the softmax probabilities:
+``g_c = p_c - [y = c]``, ``h_c = max(p_c (1 - p_c), eps)`` (the diagonal
+of the softmax Hessian, floored like logistic), so each class-tree is an
+ordinary Newton ``regression_variance`` round on its own ``(z_c, h_c)``
+channel and everything above — GOSS, subtraction, the weight channel —
+composes per class unchanged.  ``base_score`` is the class log-prior
+vector ``[C]``.
+
+Serving ABI (``link_id``)
+-------------------------
+Each loss also carries an integer ``link_id``:
+
+  ===  ========  ========================================
+   0   identity  scalar raw scores, ``[B]`` output
+   1   sigmoid   scalar raw log-odds, ``[B]`` output
+   2   softmax   per-class raw scores, ``[B, C]`` output
+  ===  ========  ========================================
+
 The multi-tenant serving layer (repro.serve.registry) cannot call a
 per-model Python ``link`` inside one jitted batch that mixes tenants, so
 it gathers ``link_id`` per request and selects the link branch-free; the
-ids are part of the serving ABI and must stay stable.  ``predict_device``
-keeps using the ``link`` method directly — the two paths are verified
-bit-identical by the serve parity tests.
+ids are part of the serving ABI and must stay stable.  ``id 2`` is
+RESERVED here so the contract is explicit before the serve layer speaks
+it: the scalar routed walk cannot represent a ``[B, C]`` output, so
+``ModelRegistry.add`` rejects ``link_id = 2`` tables with
+``NotImplementedError`` (multiclass serving is a follow-up) instead of
+silently mis-serving.  ``predict_proba_device`` keeps using the ``link``
+method directly — the two paths are verified bit-identical by the serve
+parity tests for ids 0 and 1.
 """
 from __future__ import annotations
 
@@ -54,7 +81,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SquaredLoss", "LogisticLoss", "LOSSES", "get_loss"]
+__all__ = ["SquaredLoss", "LogisticLoss", "SoftmaxLoss", "LOSSES",
+           "get_loss"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,15 +142,87 @@ class LogisticLoss:
         return jax.nn.sigmoid(raw)
 
 
-LOSSES = {"squared": SquaredLoss, "logistic": LogisticLoss}
+@dataclasses.dataclass(frozen=True)
+class SoftmaxLoss:
+    """Multiclass cross-entropy on per-class raw scores, y in {0..C-1}.
+
+    With ``p = softmax(raw)`` over the class axis:  ``g_c = p_c - [y = c]``,
+    ``h_c = p_c (1 - p_c)`` (the diagonal of the softmax Hessian), both
+    floored by ``eps`` exactly like LogisticLoss — each class channel is
+    then an independent Newton ``regression_variance`` round, which is
+    what lets the K class-trees batch through one vmapped build.
+
+    Axis convention: ``grad_hess`` / ``newton_target`` speak the training
+    loop's CLASS-FIRST layout (``raw`` is ``[C, M]``, the class axis being
+    the vmap batch axis); ``link`` speaks the prediction surface's
+    CLASS-LAST layout (``raw`` is ``[..., C]``, softmax over the last
+    axis) — see the module docstring.
+    """
+    n_classes: int
+    eps: float = 1e-6
+    name = "softmax"
+    constant_hessian = False
+    is_multiclass = True
+    link_id = 2                  # softmax, [B, C] (serving ABI, see module
+                                 # docs; serve-layer support is a follow-up)
+
+    def __post_init__(self):
+        if self.n_classes < 2:
+            raise ValueError(
+                f"SoftmaxLoss needs n_classes >= 2, got {self.n_classes}")
+
+    def base_score(self, y: jax.Array) -> jax.Array:
+        """Class log-priors [C] — softmax(base) is the empirical class
+        distribution, the multiclass analogue of the base-rate log-odds."""
+        onehot = jax.nn.one_hot(jnp.asarray(y, jnp.int32), self.n_classes,
+                                dtype=jnp.float32)
+        p = jnp.clip(onehot.mean(axis=0), self.eps, 1.0)
+        return jnp.log(p)
+
+    def grad_hess(self, y: jax.Array, raw: jax.Array):
+        """Per-class (g, h), both [C, M]; ``raw`` is class-first [C, M]."""
+        p = jax.nn.softmax(raw, axis=0)
+        onehot = jax.nn.one_hot(jnp.asarray(y, jnp.int32), self.n_classes,
+                                axis=0, dtype=jnp.float32)        # [C, M]
+        return p - onehot, jnp.maximum(p * (1.0 - p), self.eps)
+
+    def newton_target(self, g: jax.Array, h: jax.Array) -> jax.Array:
+        return -g / h
+
+    def link(self, raw: jax.Array) -> jax.Array:
+        """Class probabilities; ``raw`` is class-LAST [..., C]."""
+        return jax.nn.softmax(raw, axis=-1)
 
 
-def get_loss(loss):
-    """Resolve a loss name or pass a loss instance through."""
+LOSSES = {"squared": SquaredLoss, "logistic": LogisticLoss,
+          "softmax": SoftmaxLoss}
+
+
+def get_loss(loss, **kwargs):
+    """Resolve ``loss`` to a loss instance.
+
+    Accepts, uniformly:
+
+      * a registered name — ``get_loss("logistic")``,
+      * a parameterized name — ``get_loss("softmax", n_classes=5)``
+        (keyword arguments are forwarded to the registered class),
+      * a loss class / factory callable — ``get_loss(SoftmaxLoss,
+        n_classes=5)``,
+      * an instance — passed through unchanged (kwargs then disallowed).
+
+    Unknown names raise ValueError listing every registered entry.
+    """
     if isinstance(loss, str):
         try:
-            return LOSSES[loss]()
+            cls = LOSSES[loss]
         except KeyError:
-            raise ValueError(
-                f"unknown loss {loss!r}; have {list(LOSSES)}") from None
+            raise ValueError(f"unknown loss {loss!r}; registered losses: "
+                             f"{sorted(LOSSES)}") from None
+        return cls(**kwargs)
+    if isinstance(loss, type) or (callable(loss)
+                                  and not hasattr(loss, "grad_hess")):
+        return loss(**kwargs)
+    if kwargs:
+        raise ValueError("keyword arguments apply only when resolving a "
+                         f"loss name or factory, not an instance: {loss!r}")
     return loss

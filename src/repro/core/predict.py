@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from repro.core.split import evaluate_predicate
 from repro.core.tree import Tree
 
-__all__ = ["predict_bins", "paths", "stack_trees", "WALK_FIELDS"]
+__all__ = ["predict_bins", "paths", "stack_trees", "walk_class_trees",
+           "WALK_FIELDS"]
 
 # the Tree fields the Algorithm-7 walk reads; ensemble callers (core.forest)
 # stack exactly these per tree, so the set lives in ONE place.  The
@@ -90,6 +91,21 @@ def _walk(tree_arrays, bins, n_num, dmax, smin, *, num_steps):
 
     node = jax.lax.fori_loop(0, num_steps, body, node)
     return tree_arrays["label"][node]
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps",))
+def walk_class_trees(class_arrays, bins, n_num, *, num_steps):
+    """Walk one multiclass round's K class-trees in a single vmap over the
+    class axis of the stacked ``[C, max_nodes]`` WALK_FIELDS arrays (the
+    layout ``core.tree.build_trees_batched`` returns) against the shared
+    bins: [C, M] leaf labels, one device computation per round.  The
+    boosted multiclass score update and the stacked multiclass ensemble
+    predict both descend through this walk, mirroring how the scalar
+    ensembles share ``_walk``."""
+    no_limit = jnp.int32(1 << 30)
+    return jax.vmap(
+        lambda ta: _walk(ta, bins, n_num, no_limit, jnp.int32(0),
+                         num_steps=num_steps))(class_arrays)       # [C, M]
 
 
 def predict_bins(tree: Tree, bins, n_num, *, max_depth: int = 1 << 30,

@@ -41,7 +41,8 @@ from repro.core.histogram import (node_histogram,
                                   class_stats, moment_stats)
 from repro.core.split import best_splits, evaluate_predicate, NEG_INF
 
-__all__ = ["TreeConfig", "Tree", "build_tree", "BuildState"]
+__all__ = ["TreeConfig", "Tree", "build_tree", "build_trees_batched",
+           "BuildState"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,15 +165,15 @@ def _label_split_thresholds(lhist):
 # one chunk of one level: histogram -> Superfast Selection -> node updates
 # ---------------------------------------------------------------------------
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("num_slots", "n_bins", "heuristic", "task",
-                     "min_samples_split", "min_samples_leaf", "max_depth",
-                     "max_nodes", "hist_backend", "select_backend",
-                     "n_label_bins", "data_axes", "model_axis",
-                     "slot_scatter", "use_sub", "want_hist", "weighted",
-                     "min_child_weight"))
-def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
+_CHUNK_STEP_STATICS = ("num_slots", "n_bins", "heuristic", "task",
+                       "min_samples_split", "min_samples_leaf", "max_depth",
+                       "max_nodes", "hist_backend", "select_backend",
+                       "n_label_bins", "data_axes", "model_axis",
+                       "slot_scatter", "use_sub", "want_hist", "weighted",
+                       "min_child_weight")
+
+
+def _chunk_step_impl(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
                 n_cat, chunk_start, chunk_n, next_free, depth, weights=None, *,
                 num_slots, n_bins, heuristic, task, min_samples_split,
                 min_samples_leaf, max_depth, max_nodes, hist_backend,
@@ -425,6 +426,62 @@ def _chunk_step(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
     return arrays, n_children, hist_out
 
 
+# the jitted form every single-tree builder calls; the batched (multiclass)
+# step below and the sharded variants (core.distributed) re-enter the SAME
+# traced body through _chunk_step_impl, so the level-step semantics cannot
+# drift between the three entry points.
+_chunk_step = functools.partial(
+    jax.jit, static_argnames=_CHUNK_STEP_STATICS)(_chunk_step_impl)
+
+
+@functools.partial(jax.jit, static_argnames=_CHUNK_STEP_STATICS)
+def _chunk_step_classes(bins, stats, lbins, y, assign, arrays, phist_pairs,
+                        n_num, n_cat, chunk_start, chunk_n, next_free, depth,
+                        weights=None, *, num_slots, n_bins, heuristic, task,
+                        min_samples_split, min_samples_leaf, max_depth,
+                        max_nodes, hist_backend, select_backend, n_label_bins,
+                        data_axes=(), model_axis=None, slot_scatter=False,
+                        use_sub=False, want_hist=False, weighted=False,
+                        min_child_weight=0.0):
+    """The multiclass level-chunk step: ONE vmap of ``_chunk_step_impl``
+    over a leading class axis, so the K class-trees of a boosting round
+    cost one compilation and one batched device step per level chunk.
+
+    Batched (leading ``[C]``/``[C, ...]`` axis): the targets ``y``, the
+    example assignments, the tree arrays, the parent histogram pairs, the
+    weights, and the ``chunk_start`` / ``chunk_n`` / ``next_free`` cursor
+    vectors (each class's frontier advances at its own width).  Shared
+    across classes (closed over, no batch axis): the binned table, the
+    feature vectors, and the scalar ``depth`` — the per-class builds run
+    the SAME level in lockstep, which is what keeps the static
+    ``use_sub`` / ``want_hist`` flags common to every lane.  Classes whose
+    frontier is exhausted (or shorter than the widest class's) ride along
+    with ``chunk_n = 0`` lanes: every slot is out-of-chunk there, all
+    writes drop, and ``n_children`` is 0 — inert by the same mechanism
+    that drops past-the-end slots in the single-tree step."""
+    kw = dict(num_slots=num_slots, n_bins=n_bins, heuristic=heuristic,
+              task=task, min_samples_split=min_samples_split,
+              min_samples_leaf=min_samples_leaf, max_depth=max_depth,
+              max_nodes=max_nodes, hist_backend=hist_backend,
+              select_backend=select_backend, n_label_bins=n_label_bins,
+              data_axes=data_axes, model_axis=model_axis,
+              slot_scatter=slot_scatter, use_sub=use_sub,
+              want_hist=want_hist, weighted=weighted,
+              min_child_weight=min_child_weight)
+    if weighted:
+        def one(yv, a, ar, pp, cs, cn, nf, w):
+            return _chunk_step_impl(bins, stats, lbins, yv, a, ar, pp, n_num,
+                                    n_cat, cs, cn, nf, depth, w, **kw)
+        return jax.vmap(one)(y, assign, arrays, phist_pairs, chunk_start,
+                             chunk_n, next_free, weights)
+
+    def one(yv, a, ar, pp, cs, cn, nf):
+        return _chunk_step_impl(bins, stats, lbins, yv, a, ar, pp, n_num,
+                                n_cat, cs, cn, nf, depth, None, **kw)
+    return jax.vmap(one)(y, assign, arrays, phist_pairs, chunk_start,
+                         chunk_n, next_free)
+
+
 def _node_predicate(bins, f, op, tbin, n_num, model_axis):
     """Per-example split-predicate evaluation, feature-parallel when the
     bins are sharded over ``model_axis``: only the shard owning each
@@ -457,6 +514,19 @@ def _route_step(bins, assign, arrays, n_num, level_start, level_end, *,
                           n_num, model_axis)
     nxt = jnp.where(pos, left, arrays["right"][node])
     return jnp.where(active, nxt, node)
+
+
+@functools.partial(jax.jit, static_argnames=("model_axis",))
+def _route_step_classes(bins, assign, arrays, n_num, level_start, level_end,
+                        *, model_axis=None):
+    """Batched router for the multiclass build: one vmap of the single-tree
+    routing step over the class axis of (assign [C, M], tree arrays
+    [C, ...], level cursors [C]); the bins and feature vectors are shared.
+    Each class routes through ITS OWN tree's split records, so the class
+    frontiers diverge structurally while staying in depth lockstep."""
+    def one(a, ar, s, e):
+        return _route_step(bins, a, ar, n_num, s, e, model_axis=model_axis)
+    return jax.vmap(one)(assign, arrays, level_start, level_end)
 
 
 # ---------------------------------------------------------------------------
@@ -602,6 +672,177 @@ def _grow(step, route, arrays, assign, s_cap, max_nodes, level_callback,
                 cache[1] if cache is not None else None,
                 cache[0] if cache is not None else -1))
     return arrays, next_free
+
+
+def _parent_rows_batched(parent, cache, cs, s):
+    """Per-class parent histogram rows: ``cache`` is (base [C], H[C, W, K,
+    B, C']) of the previous level; ``cs`` is the per-class chunk start.
+    One vmap of ``_parent_rows`` over the class axis."""
+    base, hist = cache
+    return jax.vmap(lambda p, b, h, c: _parent_rows(p, (b, h), c, s))(
+        parent, jnp.asarray(base, dtype=jnp.int32), hist,
+        jnp.asarray(cs, dtype=jnp.int32))
+
+
+def _grow_batched(step, route, arrays, assign, s_cap, max_nodes,
+                  level_callback, n_stack, subtract=None, max_depth=1 << 30):
+    """The level-synchronous queue for ``n_stack`` trees grown in DEPTH
+    LOCKSTEP through one batched step (the multiclass boosting round).
+
+    Identical control flow to ``_grow`` with the scalar level cursors
+    replaced by per-class ``[C]`` vectors: every class is at the same
+    depth, but each has its own frontier ``[level_start[c], level_end[c])``
+    and node allocator ``next_free[c]``.  The chunk count per level is
+    driven by the WIDEST class; narrower (or finished) classes ride the
+    extra chunks with ``chunk_n = 0`` inert lanes.  Chunking is transparent
+    to the built trees (per-slot selection results and the sequential
+    pair allocation are independent of the chunk size), so each lane's
+    tree is bit-identical to the tree ``_grow`` would build for that class
+    alone — the parity contract tests/test_softmax.py asserts.
+
+    ``step(arrays, assign, cs, cn, next_free, depth, num_slots, phist_pairs,
+    use_sub, want_hist)`` takes ``cs`` / ``cn`` / ``next_free`` as [C] int
+    vectors and returns (arrays, n_children [C], hist [C, s, K, B, C']);
+    ``route(assign, arrays, start, end)`` routes every class.
+    ``level_callback`` (optional) receives a BuildState whose cursor fields
+    are [C] numpy vectors and whose array fields carry the class axis.
+
+    Sibling subtraction: past the root every class's level width is even
+    (children are allocated in sibling pairs) or zero, so the static
+    ``use_sub`` / ``want_hist`` flags are shared across classes; the
+    cached level histogram is padded to the widest class and per-class
+    garbage rows are dropped by the same out-of-chunk mechanism as the
+    single-tree build."""
+    level_start = np.zeros(n_stack, dtype=np.int64)
+    level_end = np.ones(n_stack, dtype=np.int64)
+    next_free = np.ones(n_stack, dtype=np.int64)
+    depth = 1
+    cache = None
+    while (level_start < level_end).any():
+        widths = level_end - level_start
+        wmax = int(widths.max())
+        s = min(s_cap, max(16, 1 << (wmax - 1).bit_length()))
+        if subtract is not None and s % 2 and s > 1:
+            s -= 1
+        paired = s % 2 == 0
+        use = (subtract is not None and cache is not None and paired
+               and bool((widths % 2 == 0).all()))
+        want = (subtract is not None and paired and depth < max_depth
+                and wmax * subtract[0] <= subtract[1])
+        hists = []
+        for i in range(0, wmax, s):
+            cs = level_start + i
+            cn = np.clip(level_end - cs, 0, min(s, wmax - i))
+            pp = (_parent_rows_batched(arrays["parent"], cache, cs, s)
+                  if use else None)
+            arrays, n_children, h = step(arrays, assign, cs, cn, next_free,
+                                         depth, s, pp, use, want)
+            next_free = next_free + np.asarray(n_children, dtype=np.int64)
+            if want:
+                hists.append(h)
+        cache = ((level_start.copy(),
+                  jnp.concatenate(hists, axis=1)[:, :wmax])
+                 if want else None)
+        assign = route(assign, arrays, level_start, level_end)
+        level_start, level_end = level_end, next_free.copy()
+        depth += 1
+        if level_callback is not None:
+            level_callback(BuildState(
+                arrays, assign, level_start, level_end, next_free, depth,
+                cache[1] if cache is not None else None,
+                cache[0] if cache is not None else -1))
+    return arrays, next_free
+
+
+def build_trees_batched(table: BinnedTable, z, config: TreeConfig,
+                        sample_weight=None, assign0=None,
+                        level_callback=None):
+    """Build one ``regression_variance`` tree per row of ``z`` [C, M]
+    through ONE vmapped level-synchronous build — the multiclass boosting
+    round's K class-trees for ~the cost (and exactly the compile count) of
+    a single tree.
+
+    ``z`` holds each class's Newton target on the SHARED binned table;
+    ``sample_weight`` (optional [C, M]) its per-class hessian channel;
+    ``assign0`` (optional [C, M] or [M] int32, -1 = inert row) seeds the
+    example assignment — the GOSS selection mask, shared or per-class.
+    Returns ``(trees, arrays)``: the per-class ``Tree`` views and the
+    underlying stacked ``[C, max_nodes]`` arrays (the boosting loop feeds
+    those straight into the vmapped score-update walk without restacking).
+
+    Each returned tree is bit-identical to ``build_tree(table, z[c], ...,
+    sample_weight=sample_weight[c])`` run per class with the same chunk
+    size (see ``_grow_batched``); the mesh twin is
+    ``core.distributed.DistributedBuilder.build_batched``."""
+    if config.task != "regression_variance":
+        raise ValueError("build_trees_batched fits 'regression_variance' "
+                         f"trees (the boosting round task); got task="
+                         f"{config.task!r}")
+    if config.min_child_weight and config.select_backend == "pallas":
+        raise ValueError("min_child_weight needs select_backend='jnp' (the "
+                         "fused split-scan kernel has no weight floor)")
+    bins = jnp.asarray(table.bins)
+    m, k = bins.shape
+    b = int(table.n_bins)
+    z = jnp.asarray(z, dtype=jnp.float32)
+    n_stack = z.shape[0]
+    weights = (jnp.asarray(sample_weight, dtype=jnp.float32)
+               if sample_weight is not None else None)
+    # stats / lbins are dead operands for regression_variance (shared,
+    # no class axis); see _prepare.
+    stats = jnp.zeros((m, 3), jnp.float32)
+    lbins = jnp.zeros((m,), jnp.int32)
+    n_num = jnp.asarray(table.n_num)
+    n_cat = jnp.asarray(table.n_cat)
+
+    max_nodes = config.max_nodes or min(2 * m + 1, 1 << 22)
+    s_cap = config.chunk_slots or _auto_chunk_slots(
+        k, b, 3, config.hist_budget_bytes)
+    arrays = {k_: jnp.broadcast_to(v[None], (n_stack,) + v.shape)
+              for k_, v in _init_arrays(max_nodes).items()}
+    if assign0 is None:
+        assign = jnp.zeros((n_stack, m), dtype=jnp.int32)
+    else:
+        assign = jnp.broadcast_to(jnp.asarray(assign0, dtype=jnp.int32),
+                                  (n_stack, m))
+    subtract = ((k * b * 3 * 4, config.sub_cache_bytes)
+                if _subtract_eligible(config, m, weights is not None)
+                else None)
+
+    kw = dict(n_bins=b, heuristic=config.heuristic, task=config.task,
+              min_samples_split=config.min_samples_split,
+              min_samples_leaf=config.min_samples_leaf,
+              max_depth=config.max_depth, max_nodes=max_nodes,
+              hist_backend=config.hist_backend,
+              select_backend=config.select_backend,
+              n_label_bins=1, weighted=weights is not None,
+              min_child_weight=config.min_child_weight)
+    dummy_pp = jnp.zeros((n_stack, 1, 1, 1, 1), dtype=jnp.float32)
+
+    def step(arrays, assign, cs, cn, next_free, depth, num_slots, pp,
+             use_sub, want_hist):
+        return _chunk_step_classes(
+            bins, stats, lbins, z, assign, arrays,
+            pp if use_sub else dummy_pp, n_num, n_cat,
+            jnp.asarray(cs, dtype=jnp.int32),
+            jnp.asarray(cn, dtype=jnp.int32),
+            jnp.asarray(next_free, dtype=jnp.int32), jnp.int32(depth),
+            weights, num_slots=num_slots, use_sub=use_sub,
+            want_hist=want_hist, **kw)
+
+    def route(assign, arrays, start, end):
+        return _route_step_classes(bins, assign, arrays, n_num,
+                                   jnp.asarray(start, dtype=jnp.int32),
+                                   jnp.asarray(end, dtype=jnp.int32))
+
+    arrays, n_nodes = _grow_batched(step, route, arrays, assign, s_cap,
+                                    max_nodes, level_callback, n_stack,
+                                    subtract=subtract,
+                                    max_depth=config.max_depth)
+    trees = [Tree(n_nodes=int(n_nodes[c]),
+                  **{k_: v[c] for k_, v in arrays.items()})
+             for c in range(n_stack)]
+    return trees, arrays
 
 
 def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),

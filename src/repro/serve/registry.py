@@ -151,9 +151,20 @@ class ModelRegistry:
 
         An array write when the model fits the current envelope (no shape
         change, no recompile); otherwise the envelope grows to fit and the
-        host buffers are rebuilt (one recompile per bucket on next use)."""
+        host buffers are rebuilt (one recompile per bucket on next use).
+
+        ``link_id = 2`` (softmax, core.losses serving ABI) is REJECTED:
+        the routed walk produces one scalar per request, so a [B, C]
+        multiclass output cannot be represented yet — refusing at
+        registration beats silently mis-serving class-0 logits."""
         packed = model if isinstance(model, PackedForest) else \
             pack_trees(model)
+        if int(packed.meta.get("link_id", 0)) == 2:
+            raise NotImplementedError(
+                "multiclass serving (link_id=2, softmax) is not supported: "
+                "the routed walk emits one scalar per request, not [B, C] "
+                "class scores; serve each class-tree set as a scalar "
+                "tenant or keep multiclass models on predict_device")
         mid = len(self.tenants)
         grew = mid >= self.capacity
         while mid >= self.capacity:

@@ -69,7 +69,8 @@ mkl = lambda: GradientBoostedTrees(n_trees=3, config=cfg, seed=7,
                                    loss="logistic", goss=goss)
 ga, gb = mkl().fit(table, yb, mesh=MESH, dist=DIST), \
          mkl().fit(table, yb, mesh=MESH, dist=DIST)
-np.testing.assert_array_equal(ga.predict(table.bins), gb.predict(table.bins))
+np.testing.assert_array_equal(ga.predict_proba(table.bins),
+                              gb.predict_proba(table.bins))
 for f in ("feat", "tbin", "left", "right"):
     np.testing.assert_array_equal(np.asarray(getattr(ga.trees[0], f)),
                                   np.asarray(getattr(gb.trees[0], f)))
@@ -140,7 +141,7 @@ for _ in range(n_trees):
     raw_ref = raw_ref + lr * predict_bins(tree, table.bins, table.n_num,
                                           num_steps=cfg.max_depth)
 p_ref = np.asarray(lo.link(raw_ref))
-p_mesh = ga.predict(table.bins)
+p_mesh = ga.predict_proba(table.bins)
 err = float(np.abs(p_mesh - p_ref).max())
 assert err < 5e-2, ("goss parity", err)
 assert float(np.abs(p_mesh - p_ref).mean()) < 5e-3

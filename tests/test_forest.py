@@ -1,5 +1,6 @@
 """Beyond-paper ensembles built on Superfast Selection."""
 import numpy as np
+import pytest
 
 from repro.core import fit_bins, transform
 from repro.core.forest import GradientBoostedTrees, RandomForest
@@ -15,8 +16,8 @@ def test_random_forest_beats_mean_tree():
     (tr_c, tr_y), _, (te_c, te_y) = train_val_test_split(cols, y)
     table = fit_bins(tr_c, max_num_bins=32)
     rf = RandomForest(n_trees=9, max_features=0.9,
-                      config=TreeConfig(max_depth=12)).fit(
-        table, tr_y, n_classes=3)
+                      config=TreeConfig(max_depth=12)).fit(table, tr_y)
+    assert rf.n_classes == 3                       # inferred from labels
     tb = transform(te_c, table)
     pred = rf.predict(tb)
     accs = [float((np.asarray(predict_bins(t, tb, nn)) == te_y).mean())
@@ -38,8 +39,7 @@ def test_random_forest_stacked_predict_bit_identical():
     (tr_c, tr_y), _, (te_c, te_y) = train_val_test_split(cols, y)
     table = fit_bins(tr_c, max_num_bins=32)
     rf = RandomForest(n_trees=7, max_features=0.6,
-                      config=TreeConfig(max_depth=9)).fit(
-        table, tr_y, n_classes=4)
+                      config=TreeConfig(max_depth=9)).fit(table, tr_y)
     tb = transform(te_c, table)
     votes = np.zeros((tb.shape[0], rf.n_classes))
     for t, nn in zip(rf.trees, rf.n_nums):
@@ -78,18 +78,35 @@ def test_rf_refit_resets_stacked_cache():
     cols, y = make_classification(800, 5, 3, seed=3)
     table = fit_bins(cols, max_num_bins=16)
     rf = RandomForest(n_trees=3, config=TreeConfig(max_depth=6), seed=0)
-    rf.fit(table, y, n_classes=3)
+    rf.fit(table, y)
     rf.predict(table.bins)
     cache = rf._stacked
     rf.predict(table.bins)
     assert rf._stacked is cache
     rf.seed = 1
-    rf.fit(table, y, n_classes=3)                  # refit drops the cache
+    rf.fit(table, y)                               # refit drops the cache
     assert rf._stacked is None
     fresh = RandomForest(n_trees=3, config=TreeConfig(max_depth=6), seed=1)
-    fresh.fit(table, y, n_classes=3)
+    fresh.fit(table, y)
     np.testing.assert_array_equal(rf.predict(table.bins),
                                   fresh.predict(table.bins))
+
+
+def test_rf_n_classes_shim_warns_and_matches_inferred():
+    """The one-release deprecation shim: passing n_classes still works but
+    warns, and fits the identical forest the inferred path does."""
+    cols, y = make_classification(800, 5, 3, seed=4)
+    table = fit_bins(cols, max_num_bins=16)
+    a = RandomForest(n_trees=3, config=TreeConfig(max_depth=6), seed=0)
+    with pytest.warns(DeprecationWarning, match="n_classes"):
+        a.fit(table, y, 3)
+    b = RandomForest(n_trees=3, config=TreeConfig(max_depth=6), seed=0)
+    b.fit(table, y)
+    assert a.n_classes == b.n_classes == 3
+    np.testing.assert_array_equal(a.predict(table.bins),
+                                  b.predict(table.bins))
+    np.testing.assert_allclose(np.asarray(a.predict_proba(table.bins)),
+                               np.asarray(b.predict_proba(table.bins)))
 
 
 def test_gbt_reduces_residuals_monotonically():

@@ -51,10 +51,12 @@ def test_logistic_gbt_beats_base_rate(goss):
     gbt = GradientBoostedTrees(
         n_trees=10, loss="logistic", goss=goss,
         config=TreeConfig(max_depth=5, task="regression_variance"))
-    p = gbt.fit(table, tr_y).predict(tb)
+    p = gbt.fit(table, tr_y).predict_proba(tb)
     assert ((p > 0.0) & (p < 1.0)).all()        # link applied: probabilities
     base_acc = max(np.mean(te_y == 0), np.mean(te_y == 1))
-    acc = np.mean((p > 0.5).astype(int) == te_y)
+    pred = gbt.predict(tb)                      # class ids, not probabilities
+    np.testing.assert_array_equal(pred, (np.asarray(p) > 0.5).astype(int))
+    acc = np.mean(pred == te_y)
     assert acc > base_acc + 0.05
     assert _auc(te_y, p) > 0.8                  # base-rate predictor: 0.5
 
@@ -113,8 +115,8 @@ def test_logistic_goss_composes_with_subtraction():
         n_trees=4, seed=5, loss="logistic", goss=GossConfig(0.2, 0.2),
         config=TreeConfig(max_depth=5, task="regression_variance",
                           sibling_subtraction=sub))
-    pa = mk(True).fit(table, tr_y).predict(tb)
-    pb = mk(True).fit(table, tr_y).predict(tb)
+    pa = mk(True).fit(table, tr_y).predict_proba(tb)
+    pb = mk(True).fit(table, tr_y).predict_proba(tb)
     np.testing.assert_array_equal(pa, pb)        # deterministic
-    pc = mk(False).fit(table, tr_y).predict(tb)
+    pc = mk(False).fit(table, tr_y).predict_proba(tb)
     np.testing.assert_allclose(pa, pc, rtol=1e-3, atol=1e-3)

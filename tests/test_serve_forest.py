@@ -137,8 +137,11 @@ def test_pack_round_trip_property():
 
 
 def test_routed_parity_single_and_mixed_tenants():
-    """Routed predictions == each tenant's own predict_device, bit for
-    bit — single-tenant batches and a freely interleaved one."""
+    """Routed predictions == each tenant's own link-applied device walk,
+    bit for bit — single-tenant batches and a freely interleaved one.
+    The routed walk emits the link-applied score (sigmoid for link_id=1,
+    raw otherwise), so logistic tenants compare on predict_proba_device;
+    predict_device thresholds to class ids on the estimator surface."""
     tenants = [_fit("squared", n_trees=4, max_depth=4, seed=0),
                _fit("logistic", n_trees=6, max_depth=3, seed=1),
                _fit("squared", n_trees=2, max_depth=5, k=3, seed=2)]
@@ -147,7 +150,9 @@ def test_routed_parity_single_and_mixed_tenants():
 
     wants = []
     for (gbt, bins), mid in zip(tenants, mids):
-        want = np.asarray(gbt.predict_device(bins))
+        want = np.asarray(gbt.predict_proba_device(bins)
+                          if gbt.loss == "logistic"
+                          else gbt.predict_device(bins))
         got = np.asarray(registry.predict(
             np.full(bins.shape[0], mid), registry.pad_bins(bins)))
         np.testing.assert_array_equal(want, got)
