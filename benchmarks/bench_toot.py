@@ -1,0 +1,238 @@
+"""TOOT design-space sweep benchmark: prices the full
+(max_depth x min_samples_split x min_child_weight) grid — plus the
+ensemble n_rounds prefix axis — from ONE trained model, and proves the
+paper's exactness claim by retraining a deterministic subset of cells.
+
+    PYTHONPATH=src python -m benchmarks.bench_toot [--smoke | --gate]
+
+The headline counter is ``oracle_mismatches``: the number of sampled grid
+cells (extreme corners plus interior points, for both the single tree and
+the boosted ensemble) where the sweep's metric differs AT ALL from the
+retrain-per-config oracle — the sweep is bit-identical or it is broken.
+``configs_per_second`` is wall-clock and therefore recorded, never gated
+(counters-not-clocks); the paper's reference point is 214.8 configs in
+0.25 s on commodity hardware.
+
+Writes BENCH_toot.json for the cross-PR trajectory.  ``--gate`` is the
+blocking CI mode: it re-runs the smoke shapes into a throwaway path (the
+no-self-ratchet rule) and exits nonzero when any sampled cell diverges
+from its retrained oracle, when the sweep prices fewer than 200 configs
+(the paper's minimum protocol), when the Pareto front is empty, or when
+the best metric drops materially below the committed baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GossConfig, GradientBoostedTrees, TreeConfig,
+                        build_tree, fit_bins, predict_bins, prune_stats,
+                        sweep, transform)
+from repro.core.tuning import SweepSpace
+from repro.data import make_classification, train_val_test_split
+
+# the one definition of the CI smoke-gate shapes (benchmarks/run.py --smoke
+# and the --gate mode both use it, so artifacts stay comparable)
+SMOKE = dict(m=4_000, k=8, c=3, n_bins=32,
+             dmax_values=(3, 5, 8, 64), mcw_values=(0.0, 6.0),
+             ens_trees=6, ens_depth=5, seed=0)
+
+MIN_CONFIGS = 200       # the paper sweeps >= 200 configs from one tree
+METRIC_SLACK = 0.02     # tolerated absolute drop vs the committed baseline
+
+
+def _oracle_cells(shape, n_interior=4, seed=0):
+    """Deterministic cell subset: every extreme corner of the grid plus a
+    few seeded interior points — small enough to retrain, adversarial
+    enough (corners are where clamping/sentinel bugs live)."""
+    corners = [tuple(c) for c in
+               np.stack(np.meshgrid(*[[0, s - 1] for s in shape],
+                                    indexing="ij"), -1).reshape(-1,
+                                                                len(shape))]
+    rng = np.random.default_rng(seed)
+    interior = [tuple(int(rng.integers(0, s)) for s in shape)
+                for _ in range(n_interior)]
+    seen, out = set(), []
+    for c in corners + interior:
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def run(m=20_000, k=10, c=3, n_bins=64, dmax_values=(3, 5, 8, 16, 64),
+        mcw_values=(0.0, 6.0, 25.0), ens_trees=10, ens_depth=5, seed=0,
+        out="BENCH_toot.json"):
+    cols, y = make_classification(m, k, c, seed=seed, n_cat_features=2)
+    (tr_c, tr_y), (va_c, va_y), _ = train_val_test_split(cols, y, seed=seed)
+    table = fit_bins(tr_c, max_num_bins=n_bins)
+    vb = transform(va_c, table)
+
+    # --- single tree: full design space, default 200-value smin axis ----
+    full = build_tree(table, tr_y, TreeConfig(max_depth=64), n_classes=c)
+    space = SweepSpace(dmax_values=dmax_values, mcw_values=mcw_values)
+    t0 = time.perf_counter()
+    res = sweep(full, vb, va_y, table.n_num, space=space,
+                train_size=len(tr_y))
+    sweep_s = time.perf_counter() - t0
+
+    mismatches = 0
+    cells = _oracle_cells(res.metric.shape, seed=seed)
+    for i, j, w in cells:
+        d, s, mw = int(res.dmax[i]), int(res.smin[j]), float(res.mcw[w])
+        rt = build_tree(table, tr_y,
+                        TreeConfig(max_depth=d, min_samples_split=s,
+                                   min_child_weight=mw), n_classes=c)
+        acc = float((np.asarray(predict_bins(rt, vb, table.n_num))
+                     == va_y).mean())
+        nodes = prune_stats(full, d, s, mw)[0]
+        if res.metric[i, j, w] != acc or res.n_nodes[i, j, w] != nodes:
+            mismatches += 1
+
+    # --- boosted ensemble: n_rounds prefix axis joins the grid ----------
+    # same seed -> same split rows as above, so `table`/`vb` are reusable
+    yb = (np.asarray(y) % 2)
+    (_, trb_y), (_, vab_y), _ = train_val_test_split(cols, yb, seed=seed)
+    ens = GradientBoostedTrees(
+        n_trees=ens_trees, learning_rate=0.3,
+        config=TreeConfig(max_depth=ens_depth, task="regression_variance"),
+        loss="logistic", seed=seed, goss=GossConfig(0.2, 0.2))
+    ens.fit(table, trb_y.astype(np.float32))
+    espace = SweepSpace(dmax_values=(2, ens_depth), smin_values=(0, 20),
+                        mcw_values=(0.0, 4.0),
+                        n_rounds_values=tuple(range(1, ens_trees + 1)))
+    t0 = time.perf_counter()
+    eres = ens.sweep(vb, vab_y, space=espace, train_size=len(trb_y))
+    ens_sweep_s = time.perf_counter() - t0
+
+    ens_mismatches = 0
+    ecells = _oracle_cells(eres.metric.shape, n_interior=2, seed=seed)
+    refits = {}
+    for r, i, j, w in ecells:
+        nr = int(eres.n_rounds[r])
+        if nr not in refits:
+            refit = GradientBoostedTrees(
+                n_trees=nr, learning_rate=0.3,
+                config=TreeConfig(max_depth=ens_depth,
+                                  task="regression_variance"),
+                loss="logistic", seed=seed, goss=GossConfig(0.2, 0.2))
+            refits[nr] = refit.fit(table, trb_y.astype(np.float32))
+        refit = refits[nr]
+        raw = jnp.full((len(vab_y),), jnp.float32(refit.base))
+        for t in refit.trees:
+            raw = raw + jnp.float32(0.3) * predict_bins(
+                t, vb, table.n_num, max_depth=int(eres.dmax[i]),
+                min_samples_split=int(eres.smin[j]),
+                min_child_weight=float(eres.mcw[w]), num_steps=ens_depth)
+        acc = float((np.asarray(raw > 0).astype(int) == vab_y).mean())
+        if eres.metric[r, i, j, w] != acc:
+            ens_mismatches += 1
+
+    n_configs = int(res.n_configs + eres.n_configs)
+    report = dict(
+        config=dict(m=m, k=k, c=c, n_bins=n_bins,
+                    dmax_values=list(dmax_values),
+                    mcw_values=list(mcw_values), ens_trees=ens_trees,
+                    ens_depth=ens_depth, seed=seed),
+        n_configs_tree=int(res.n_configs),
+        n_configs_ensemble=int(eres.n_configs),
+        n_configs=n_configs,
+        oracle_cells_checked=len(cells) + len(ecells),
+        oracle_mismatches=int(mismatches + ens_mismatches),
+        best_metric=float(res.best.metric),
+        best_nodes=int(res.best.n_nodes),
+        best_walk_bytes=int(res.best.walk_bytes),
+        front_size=len(res.front),
+        ens_best_metric=float(eres.best.metric),
+        ens_front_size=len(eres.front),
+        configs_per_second=round(n_configs / max(sweep_s + ens_sweep_s,
+                                                 1e-9), 1),
+        wall_sweep_s=round(sweep_s, 3),
+        wall_ens_sweep_s=round(ens_sweep_s, 3),
+    )
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print("toot,metric,tree,ensemble")
+    print(f"toot,n_configs,{res.n_configs},{eres.n_configs}")
+    print(f"toot,best_metric,{report['best_metric']},"
+          f"{report['ens_best_metric']}")
+    print(f"toot,front_size,{report['front_size']},"
+          f"{report['ens_front_size']}")
+    print(f"toot,oracle_mismatches,{mismatches},{ens_mismatches}")
+    print(f"toot_total,{n_configs} configs priced in "
+          f"{round(sweep_s + ens_sweep_s, 3)}s "
+          f"({report['configs_per_second']}/s), "
+          f"{report['oracle_cells_checked']} cells retrained, "
+          f"{report['oracle_mismatches']} mismatches, -> {out}")
+    return report
+
+
+def gate(baseline_path="BENCH_toot.json"):
+    """Blocking CI gate: smoke sweep vs retrained oracles + baseline.
+
+    Blocks on exactness (zero oracle mismatches across the sampled cells,
+    single tree AND boosted ensemble), on coverage (>= MIN_CONFIGS priced,
+    non-empty Pareto fronts), and on the best metric staying within
+    METRIC_SLACK of the committed baseline.  configs_per_second is
+    recorded, never gated.  Writes its own report to a throwaway path so
+    a regressed run can never ratchet the committed baseline down."""
+    baseline = None
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    report = run(**SMOKE, out=os.path.join(
+        tempfile.gettempdir(), "BENCH_toot_gate.json"))
+
+    exact_ok = report["oracle_mismatches"] == 0
+    lines = [f"toot-gate: {report['oracle_cells_checked']} retrained "
+             f"oracle cells, {report['oracle_mismatches']} mismatches "
+             f"(require 0) -> {'OK' if exact_ok else 'FAIL'}"]
+    ok = exact_ok
+    cfg_ok = report["n_configs"] >= MIN_CONFIGS
+    ok = ok and cfg_ok
+    lines.append(f"toot-gate: {report['n_configs']} configs priced "
+                 f"(require >= {MIN_CONFIGS}) -> "
+                 f"{'OK' if cfg_ok else 'FAIL'}")
+    front_ok = report["front_size"] >= 1 and report["ens_front_size"] >= 1
+    ok = ok and front_ok
+    lines.append(f"toot-gate: front sizes {report['front_size']} / "
+                 f"{report['ens_front_size']} (require >= 1) -> "
+                 f"{'OK' if front_ok else 'FAIL'}")
+    lines.append(f"toot-gate: {report['configs_per_second']} configs/s "
+                 "(recorded, not gated)")
+    if baseline is None:
+        lines.append(f"toot-gate: no baseline at {baseline_path} "
+                     "(floor checks only)")
+    elif baseline.get("config") != report["config"]:
+        lines.append("toot-gate: baseline config differs "
+                     "(floor checks only)")
+    else:
+        want = round(baseline["best_metric"] - METRIC_SLACK, 4)
+        rel_ok = report["best_metric"] >= want
+        ok = ok and rel_ok
+        lines.append(f"toot-gate: best metric {report['best_metric']} "
+                     f"(baseline {baseline['best_metric']}, require >= "
+                     f"{want}) -> {'OK' if rel_ok else 'FAIL'}")
+    print("\n".join(lines))
+    return 0 if ok else 1
+
+
+def main():
+    if "--gate" in sys.argv:
+        sys.exit(gate())
+    if "--smoke" in sys.argv:
+        return run(**SMOKE)
+    return run()
+
+
+if __name__ == "__main__":
+    main()

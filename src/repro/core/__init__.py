@@ -5,6 +5,7 @@ Public API:
     build_tree / TreeConfig     level-synchronous UDT training
     predict_bins                Algorithm 7 predict (runtime hyper-params)
     tune / toot_grid            Training-Only-Once Tuning
+    sweep / SweepSpace          TOOT design-space engine + Pareto fronts
     best_splits                 vectorised Superfast Selection
 """
 from repro.core.binning import (  # noqa: F401
@@ -24,7 +25,11 @@ from repro.core.tree import (  # noqa: F401
 from repro.core.predict import (  # noqa: F401
     predict_bins, paths, stack_trees, walk_class_trees,
 )
-from repro.core.tuning import tune, toot_grid, prune_stats, TuneResult  # noqa: F401
+from repro.core.tuning import (  # noqa: F401
+    tune, toot_grid, prune_stats, TuneResult,
+    sweep, path_tables, pareto_front, default_smin_values,
+    SweepSpace, SweepResult, ParetoPoint,
+)
 from repro.core.forest import (  # noqa: F401
     GossConfig, GradientBoostedTrees, RandomForest,
 )

@@ -76,7 +76,8 @@ from repro.core.tree import (Tree, TreeConfig, _auto_chunk_slots, _chunk_step,
                              _subtract_eligible)
 
 __all__ = ["DistConfig", "DistributedBuilder", "build_tree_distributed",
-           "make_sharded_step", "make_sharded_sampler", "make_sharded_walk"]
+           "make_sharded_step", "make_sharded_sampler", "make_sharded_walk",
+           "make_sharded_grid_counts", "sharded_grid_counts"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -419,6 +420,73 @@ def make_sharded_walk(mesh: Mesh, dist: DistConfig, num_steps: int,
     fn = jax.jit(shard_map_norep(body, mesh=mesh, in_specs=in_specs,
                                  out_specs=rspec))
     return _cache_put(_WALK_CACHE, cache_key, fn)
+
+
+_GRID_CACHE: dict = {}
+
+
+def make_sharded_grid_counts(mesh: Mesh, dist: DistConfig, *,
+                             classification: bool = True):
+    """Jitted mesh-sharded TOOT design-space kernel:
+    ``fn(lab, cnt, cmc, y, valid, smin, mcw, dmax)`` prices the whole
+    (dmax x smin x mcw) grid against the sharded validation path tables.
+
+    The body IS ``core.tuning._grid_counts_body`` — the same function the
+    local jitted kernel wraps — run inside shard_map with the path-table
+    rows [M, T] sharded over ``dist.data_axes`` and the smin axis sharded
+    over ``dist.model_axis`` (the feature axis carries no features here;
+    it is reused as the grid-slice axis so the sweep composes with
+    ``DistributedBuilder``'s mesh with zero re-sharding of the mesh
+    itself).  Each shard prices its [Nd, Ns/f, Nw] slice against its row
+    shard; ONE int32 psum over the data axes totals the
+    correct-prediction counts (order-independent, so the sharded grid is
+    bit-identical to the single-device grid), and the out_spec's
+    model-axis sharding makes the final gather implicit in the first
+    host read.  Collective bytes: Nd*Ns*Nw*4 per data axis — independent
+    of M, the same property that makes the histogram psum small."""
+    cache_key = (mesh, dist, classification)
+    hit = _GRID_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
+    from repro.core.tuning import _grid_counts_body
+    dspec = P(dist.data_axes)
+
+    def body(lab, cnt, cmc, y, valid, smin, mcw, dmax):
+        out = _grid_counts_body(lab, cnt, cmc, y, valid, smin, mcw, dmax,
+                                classification=classification)
+        return jax.lax.psum(out, dist.data_axes)
+
+    in_specs = (dspec, dspec, dspec, dspec, dspec,
+                P(dist.model_axis), P(), P())
+    out_specs = P(None, dist.model_axis, None)
+    fn = jax.jit(shard_map_norep(body, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs))
+    return _cache_put(_GRID_CACHE, cache_key, fn)
+
+
+def sharded_grid_counts(mesh: Mesh, dist: DistConfig, lab, cnt, cmc, y,
+                        smin, mcw, dmax, *, classification: bool = True):
+    """Host convenience over ``make_sharded_grid_counts``: pad the example
+    rows to the data-shard count (masked inert via ``valid``) and the smin
+    axis to the feature-shard count (sentinel Int32.max, trimmed from the
+    result), invoke the cached kernel, return the [Nd, Ns, Nw] totals."""
+    d_shards = max(1, int(np.prod([mesh.shape[a] for a in dist.data_axes])))
+    f_shards = mesh.shape[dist.model_axis] if dist.model_axis else 1
+    m = np.asarray(lab).shape[0]
+    ns = np.asarray(smin).shape[0]
+    lab_p = _pad_to(np.asarray(lab, dtype=np.float32), d_shards, 0, 0.0)
+    cnt_p = _pad_to(np.asarray(cnt), d_shards, 0, 0)
+    cmc_p = _pad_to(np.asarray(cmc, dtype=np.float32), d_shards, 0, 0.0)
+    y_p = _pad_to(np.asarray(y, dtype=np.float32), d_shards, 0, 0.0)
+    valid = _pad_to(np.ones(m, dtype=bool), d_shards, 0, False)
+    smin_p = _pad_to(np.asarray(smin, dtype=np.int32), f_shards, 0,
+                     np.iinfo(np.int32).max)
+    fn = make_sharded_grid_counts(mesh, dist, classification=classification)
+    out = fn(jnp.asarray(lab_p), jnp.asarray(cnt_p), jnp.asarray(cmc_p),
+             jnp.asarray(y_p), jnp.asarray(valid), jnp.asarray(smin_p),
+             jnp.asarray(mcw, dtype=jnp.float32),
+             jnp.asarray(dmax, dtype=jnp.int32))
+    return np.asarray(out)[:, :ns, :]
 
 
 class DistributedBuilder:

@@ -99,6 +99,7 @@ def _forest_votes(stacked, n_nums, bins, *, num_steps, n_classes):
     no_limit = jnp.int32(1 << 30)
     per_tree = jax.vmap(
         lambda ta, nn: _walk(ta, bins, nn, no_limit, jnp.int32(0),
+                             jnp.float32(0.0),
                              num_steps=num_steps))(stacked, n_nums)  # [T, M]
     return jax.nn.one_hot(per_tree.astype(jnp.int32), n_classes,
                           dtype=jnp.float32).sum(axis=0)            # [M, C]
@@ -408,6 +409,7 @@ def _ensemble_predict(stacked, bins, n_num, lr, base, *, num_steps):
     no_limit = jnp.int32(1 << 30)
     per_tree = jax.vmap(
         lambda ta: _walk(ta, bins, n_num, no_limit, jnp.int32(0),
+                         jnp.float32(0.0),
                          num_steps=num_steps))(stacked)        # [T, M]
     return base + lr * per_tree.sum(axis=0)
 
@@ -423,6 +425,7 @@ def _ensemble_predict_multiclass(stacked, bins, n_num, lr, base, *,
     no_limit = jnp.int32(1 << 30)
     per_tree = jax.vmap(
         lambda ta: _walk(ta, bins, n_num, no_limit, jnp.int32(0),
+                         jnp.float32(0.0),
                          num_steps=num_steps))(stacked)        # [R*C, M]
     per_class = per_tree.reshape(-1, n_classes,
                                  per_tree.shape[1]).sum(axis=0)  # [C, M]
@@ -762,6 +765,17 @@ class GradientBoostedTrees:
         if lo.link_id == 1:
             return (raw > 0).astype(jnp.int32)
         return raw
+
+    def sweep(self, val_bins, y_val, **kwargs):
+        """Price the ensemble's design space — ``(n_rounds x max_depth x
+        min_samples_split x min_child_weight)`` — from this one fit and
+        return the cost/quality Pareto front.  Delegates to
+        ``core.tuning.sweep`` (see there for the exactness contract:
+        n_rounds is exactly retraining, the pruning axes are predict-time
+        pruning of every round's trees).  Keyword arguments pass through
+        (``space=SweepSpace(...)``, ``train_size=...``)."""
+        from repro.core import tuning
+        return tuning.sweep(self, val_bins, y_val, **kwargs)
 
     def predict_raw(self, bins):
         return np.asarray(self.predict_raw_device(bins))

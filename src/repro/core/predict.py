@@ -77,7 +77,7 @@ def _descend(tree_arrays, bins, n_num, node):
 
 
 @functools.partial(jax.jit, static_argnames=("num_steps",))
-def _walk(tree_arrays, bins, n_num, dmax, smin, *, num_steps):
+def _walk(tree_arrays, bins, n_num, dmax, smin, mcw, *, num_steps):
     m = bins.shape[0]
     node = jnp.zeros((m,), dtype=jnp.int32)
 
@@ -86,6 +86,15 @@ def _walk(tree_arrays, bins, n_num, dmax, smin, *, num_steps):
                & (tree_arrays["left"][node] >= 0)
                & (tree_arrays["count"][node] >= smin)
                & (i < dmax - 1))
+        # runtime min_child_weight mirrors the builder's stopping rule: stay
+        # at the node when its split's lighter child carries <= mcw (rounded)
+        # weight.  Index guards keep the gather in-bounds at leaves (where
+        # can is already False).
+        lc = jnp.maximum(tree_arrays["left"][node], 0)
+        rc = jnp.maximum(tree_arrays["right"][node], 0)
+        child_min = jnp.minimum(tree_arrays["count"][lc],
+                                tree_arrays["count"][rc])
+        can = can & ((mcw <= 0) | (child_min > mcw))
         nxt = _descend(tree_arrays, bins, n_num, node)
         return jnp.where(can, nxt, node)
 
@@ -105,13 +114,20 @@ def walk_class_trees(class_arrays, bins, n_num, *, num_steps):
     no_limit = jnp.int32(1 << 30)
     return jax.vmap(
         lambda ta: _walk(ta, bins, n_num, no_limit, jnp.int32(0),
+                         jnp.float32(0.0),
                          num_steps=num_steps))(class_arrays)       # [C, M]
 
 
 def predict_bins(tree: Tree, bins, n_num, *, max_depth: int = 1 << 30,
                  min_samples_split: int = 0,
+                 min_child_weight: float = 0.0,
                  num_steps: int | None = None) -> jax.Array:
     """Predict labels for pre-binned examples under runtime hyper-params.
+
+    ``min_child_weight`` replays the builder's stopping rule at predict
+    time: the walk stops where the split's lighter child count (the rounded
+    weight sum ``Tree.count`` records) is <= the threshold — so a full-grown
+    tree answers as if trained with that value (see TreeConfig).
 
     ``num_steps`` overrides the walk length (any static bound >= the tree's
     depth works; extra steps stay at the leaf).  The default reads the depth
@@ -122,6 +138,7 @@ def predict_bins(tree: Tree, bins, n_num, *, max_depth: int = 1 << 30,
     return _walk({k: arrays[k] for k in WALK_FIELDS},
                  jnp.asarray(bins), jnp.asarray(n_num),
                  jnp.int32(max_depth), jnp.int32(min_samples_split),
+                 jnp.float32(min_child_weight),
                  num_steps=max(1, steps))
 
 

@@ -69,10 +69,9 @@ def _candidate_stats(hist, n_num, n_cat):
     return pos, neg, valid
 
 
-@functools.partial(jax.jit, static_argnames=("heuristic", "min_leaf", "min_child_weight"))
+@functools.partial(jax.jit, static_argnames=("heuristic", "min_leaf"))
 def best_splits(hist: jax.Array, n_num: jax.Array, n_cat: jax.Array, *,
-                heuristic: str = "info_gain", min_leaf: int = 1,
-                min_child_weight: float = 0.0) -> SplitDecision:
+                heuristic: str = "info_gain", min_leaf: int = 1) -> SplitDecision:
     """Select the best split for every node slot (Algorithm 4, batched).
 
     hist: [S, K, B, C] statistics; for classification C = #classes and the
@@ -86,16 +85,23 @@ def best_splits(hist: jax.Array, n_num: jax.Array, n_cat: jax.Array, *,
     the scored gain is exactly the gain of the estimated full-data split.
     The count channels are then float *weighted* counts: ``min_leaf``
     bounds the estimated full-data example count of each side (LightGBM's
-    semantics), and ``min_child_weight`` adds a strict floor on the same
-    weighted scale — useful to keep a handful of amplified small-gradient
-    examples from supporting a split on their own.
+    semantics).
 
     Newton boosting (core.losses) rides the identical mechanism with
     hessians as the weights: the moment channels become ``(sum h,
     sum h*z, sum h*z^2)`` with ``z = -g/h``, so the "sse" score
     ``(sum h*z)^2 / sum h`` of a side IS the XGBoost split gain
-    ``(sum g)^2 / sum h``, and ``min_child_weight`` bounds the per-child
-    hessian sum — XGBoost's parameter of the same name, for free.
+    ``(sum g)^2 / sum h``.
+
+    ``min_child_weight`` is deliberately NOT a candidate mask here: it is a
+    post-selection STOPPING rule applied by the tree builder
+    (core.tree._chunk_step_impl) to the WINNING split's child counts.
+    Masking candidates would make which split wins depend on the value — a
+    different candidate is selected when the best one is masked — which
+    breaks the Training-Only-Once property that a full tree pruned at
+    predict time equals the tree retrained with that value (core/tuning.py
+    prices the whole min_child_weight axis from one tree on exactly this
+    contract).
     """
     h_fn = H.get(heuristic)
     s, k, b, c = hist.shape
@@ -107,8 +113,7 @@ def best_splits(hist: jax.Array, n_num: jax.Array, n_cat: jax.Array, *,
 
     score = h_fn(pos, neg)                                          # [3,S,K,B]
     ok = (valid[:, None]
-          & (cnt_pos >= min_leaf) & (cnt_neg >= min_leaf)
-          & (cnt_pos > min_child_weight) & (cnt_neg > min_child_weight))
+          & (cnt_pos >= min_leaf) & (cnt_neg >= min_leaf))
     score = jnp.where(ok, score, NEG_INF)
 
     flat = score.transpose(1, 0, 2, 3).reshape(s, 3 * k * b)        # [S, 3KB]

@@ -69,13 +69,17 @@ class TreeConfig:
     # subtraction does not apply there.
     sibling_subtraction: bool = True
     sub_cache_bytes: int = 1 << 28    # skip caching levels wider than this
-    # Weighted builds only (build_tree's sample_weight): a strict floor on
-    # the WEIGHTED example count of both split sides.  Under GOSS weights it
-    # prevents a couple of (1-a)/b-amplified small-gradient examples from
-    # supporting a split alone; under Newton boosting (core.losses, where
-    # sample_weight = h) the weighted count IS the hessian sum, so this is
-    # exactly XGBoost's min_child_weight.  0.0 disables it; jnp select
-    # backend only.
+    # A post-selection STOPPING rule: the node keeps its unconstrained best
+    # split, but becomes a leaf when that split's lighter child carries
+    # <= min_child_weight (rounded) weight.  It is deliberately NOT a
+    # candidate mask (see best_splits' docstring) — masking would change
+    # WHICH split wins and break the Training-Only-Once property that
+    # core/tuning.py relies on to price the whole min_child_weight axis
+    # from one full tree.  Under GOSS weights the count is the amplified
+    # estimate of the full-data example count; under Newton boosting
+    # (core.losses, where sample_weight = h) it IS the hessian sum, i.e.
+    # XGBoost's min_child_weight as a pre-pruning rule.  0.0 disables it;
+    # jnp select backend only (the Pallas path drops child stats).
     min_child_weight: float = 0.0
 
 
@@ -251,6 +255,20 @@ def _chunk_step_impl(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
 
         return jax.tree.map(g, tree)
 
+    # min_child_weight is a post-selection STOPPING rule (see best_splits'
+    # docstring): the winning split's smaller-child count decides whether
+    # the node splits at all.  ``child_min_count`` extracts that count —
+    # rounded to the nearest int, the SAME scale Tree.count records — so
+    # the builder's stop test and the predict-time pruning walk
+    # (core.predict / core.tuning) compare identical values, which is what
+    # makes the Training-Only-Once pricing of the mcw axis exact.
+    moment_task = task in ("regression", "regression_variance")
+
+    def child_min_count(dec):
+        cp = dec.pos_stats[:, 0] if moment_task else dec.pos_stats.sum(-1)
+        cn = dec.neg_stats[:, 0] if moment_task else dec.neg_stats.sum(-1)
+        return jnp.minimum(jnp.round(cp), jnp.round(cn))            # [S] f32
+
     def select(hist, n_num_, n_cat_, *, heuristic, min_leaf):
         if select_backend == "pallas":
             dec = split_mod.best_splits_kernel(hist, n_num_, n_cat_,
@@ -258,10 +276,9 @@ def _chunk_step_impl(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
                                                min_leaf=min_leaf)
         else:
             dec = best_splits(hist, n_num_, n_cat_, heuristic=heuristic,
-                              min_leaf=min_leaf,
-                              min_child_weight=min_child_weight)
+                              min_leaf=min_leaf)
         if model_axis is None:
-            return dec
+            return dec, child_min_count(dec)
         # feature-parallel: each shard picked its best LOCAL feature; a tiny
         # all-gather of [S] tuples + argmax yields the global winner.
         # Tie-breaking must match the single-device flat argmax exactly
@@ -273,12 +290,16 @@ def _chunk_step_impl(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
         k_tot = k_local * n_shards
         feat_g = dec.feat + my * k_local
         flat_idx = (dec.op * k_tot + feat_g) * n_bins + dec.bin   # global order
+        # row 5 carries the LOCAL winner's smaller-child count so the
+        # global pick also yields the winning shard's stop-rule statistic
+        # (dec.pos/neg_stats stay local — only the scalar count is needed).
         cand = jnp.stack([dec.score,
                           feat_g.astype(jnp.float32),
                           dec.bin.astype(jnp.float32),
                           dec.op.astype(jnp.float32),
-                          flat_idx.astype(jnp.float32)])          # [5, S]
-        allc = jax.lax.all_gather(cand, model_axis)               # [P, 5, S]
+                          flat_idx.astype(jnp.float32),
+                          child_min_count(dec)])                  # [6, S]
+        allc = jax.lax.all_gather(cand, model_axis)               # [P, 6, S]
         best_score = allc[:, 0].max(axis=0)                       # [S]
         is_max = allc[:, 0] >= best_score[None]
         key = jnp.where(is_max, allc[:, 4], jnp.float32(3e38))
@@ -286,7 +307,7 @@ def _chunk_step_impl(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
         pick = lambda j: jnp.take_along_axis(allc[:, j], win[None], axis=0)[0]
         return split_mod.SplitDecision(
             pick(0), pick(1).astype(jnp.int32), pick(2).astype(jnp.int32),
-            pick(3).astype(jnp.int32), dec.pos_stats, dec.neg_stats)
+            pick(3).astype(jnp.int32), dec.pos_stats, dec.neg_stats), pick(5)
     slot_of_node = assign - chunk_start
     slot = jnp.where((slot_of_node >= 0) & (slot_of_node < chunk_n),
                      slot_of_node, -1)
@@ -362,9 +383,9 @@ def _chunk_step_impl(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
         count = jnp.round(count_f).astype(jnp.int32)
         pure = sse <= 1e-10 * jnp.maximum(count_f, 1.0)
         hist = build_hist(stats)
-        dec = select(hist, n_num, n_cat, heuristic=heuristic,
-                     min_leaf=min_samples_leaf)
-        dec = regather(dec)
+        dec, mc = select(hist, n_num, n_cat, heuristic=heuristic,
+                         min_leaf=min_samples_leaf)
+        dec, mc = regather((dec, mc))
     elif task == "regression_variance":
         hist = build_hist(moment_stats(y))
         tot = hist[:, 0].sum(axis=1)                                # [S,3]
@@ -373,23 +394,29 @@ def _chunk_step_impl(bins, stats, lbins, y, assign, arrays, phist_pairs, n_num,
         label = tot[:, 1] / safe
         count = jnp.round(count_f).astype(jnp.int32)
         pure = (tot[:, 2] - tot[:, 1] ** 2 / safe) <= 1e-10 * jnp.maximum(count_f, 1.0)
-        dec = select(hist, n_num, n_cat, heuristic="sse",
-                     min_leaf=min_samples_leaf)
-        count, label, pure, dec = regather((count, label, pure, dec))
+        dec, mc = select(hist, n_num, n_cat, heuristic="sse",
+                         min_leaf=min_samples_leaf)
+        count, label, pure, dec, mc = regather((count, label, pure, dec, mc))
     else:
         hist = build_hist(stats)
         tot = hist[:, 0].sum(axis=1)                                # [S,C]
         count = jnp.round(tot.sum(-1)).astype(jnp.int32)
         label = jnp.argmax(tot, axis=-1).astype(jnp.float32)
         pure = tot.max(-1) == tot.sum(-1)
-        dec = select(hist, n_num, n_cat, heuristic=heuristic,
-                     min_leaf=min_samples_leaf)
-        count, label, pure, dec = regather((count, label, pure, dec))
+        dec, mc = select(hist, n_num, n_cat, heuristic=heuristic,
+                         min_leaf=min_samples_leaf)
+        count, label, pure, dec, mc = regather((count, label, pure, dec, mc))
 
     no_split = dec.score <= NEG_INF / 2
     is_leaf = (in_chunk & (pure | no_split
                            | (count < min_samples_split)
                            | (depth >= max_depth)))
+    if min_child_weight:
+        # stopping rule, not a candidate mask: the node keeps its
+        # unconstrained best split but becomes a leaf when that split's
+        # lighter child carries <= min_child_weight (rounded) weight.
+        # mc is garbage where no_split holds — already a leaf there.
+        is_leaf = is_leaf | (in_chunk & (mc <= min_child_weight))
     wants_split = in_chunk & ~is_leaf
 
     # allocate children; respect the node budget (overflow -> forced leaf)
@@ -858,8 +885,9 @@ def build_tree(table: BinnedTable, y, config: TreeConfig = TreeConfig(),
     histogram row, so node counts, labels and split scores become the
     weighted — for GOSS, unbiased full-data — estimates;
     ``min_samples_split`` / ``min_samples_leaf`` then bound weighted counts
-    (rounded to nearest) and ``min_child_weight`` floors the per-child
-    weight sum (= the hessian sum under Newton boosting).  Supported for
+    (rounded to nearest) and ``min_child_weight`` leaf-ifies nodes whose
+    winning split's lighter child carries too little weight (= hessian sum
+    under Newton boosting; a stopping rule, see TreeConfig).  Supported for
     "classification" (disables the sibling-subtraction fast path: its
     bit-exactness contract does not survive float weights) and
     "regression_variance" (subtraction stays on under the float-tolerance

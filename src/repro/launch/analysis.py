@@ -153,6 +153,18 @@ def corrected(raw: dict, body1: dict, body2: dict, n_groups: int) -> dict:
     return out
 
 
+def serve_seconds_lower_bound(walk_bytes_request: float, requests: float,
+                              chips: int = 1) -> float:
+    """HBM-roofline lower bound on forest-serving time: the packed
+    node-table bytes the walks must stream
+    (``serve.pack.walk_bytes_per_request`` x requests) over the aggregate
+    HBM bandwidth.  Composed with ``core.tuning.sweep``'s predicted
+    per-cell walk bytes this turns a design-space Pareto front's cost
+    axis into projected serving seconds — deterministic shape arithmetic,
+    never a wall-clock (the counters-not-clocks rule)."""
+    return float(walk_bytes_request) * float(requests) / (chips * HBM_BW)
+
+
 def model_flops(cfg, shape_kind: str, tokens: int) -> float:
     """Analytic 6*N_active*D (train fwd+bwd) or 2*N_active*D (inference)."""
     n = cfg.active_param_count()

@@ -53,7 +53,8 @@ import numpy as np
 from repro.core.predict import WALK_FIELDS
 
 __all__ = ["PackedForest", "pack_trees", "pack_stacked", "unpack",
-           "walk_bytes_per_request", "FAT_STEP_BYTES", "LABEL_BYTES"]
+           "walk_bytes_per_request", "predict_record_bytes",
+           "FAT_STEP_BYTES", "LABEL_BYTES"]
 
 # Per-(step, tree) bytes the f32/i32 stacked walk (core.predict._walk)
 # touches: leaf, left, count, feat, op, tbin — six 4-byte fields.  The
@@ -169,6 +170,30 @@ def unpack(packed: PackedForest) -> dict:
         left=left.astype(np.int32),
         right=np.where(split, left + 1, -1).astype(np.int32),
         leaf=~split, label=packed.label.astype(np.float32))
+
+
+def _field_width(max_value: int) -> int:
+    """Bytes of the narrowest int8/int16/int32 holding [-1, max_value] —
+    the closed form of ``_narrowest``'s rule for the node fields (their
+    minimum is the -1 leaf sentinel, so only the max can overflow)."""
+    if max_value <= 127:
+        return 1
+    if max_value <= 32767:
+        return 2
+    return 4
+
+
+def predict_record_bytes(n_feat: int, n_bins: int, max_loff: int) -> int:
+    """Predict ``PackedForest.record_bytes`` from field ranges, without
+    packing: feat needs ``n_feat - 1``, tbin ``n_bins - 1``, loff its max
+    left-child offset, op is always int8.  Agrees with ``pack_stacked``'s
+    per-field overflow rule by construction (asserted in
+    tests/test_serve_forest.py), which is what lets the TOOT sweep
+    (core.tuning) price every design-space cell's serve bytes from shapes
+    alone — same counters-not-clocks discipline as
+    ``walk_bytes_per_request``."""
+    return (_field_width(n_feat - 1) + 1 + _field_width(n_bins - 1)
+            + _field_width(max_loff))
 
 
 def walk_bytes_per_request(n_trees: int, num_steps: int,

@@ -80,6 +80,25 @@ def test_pack_overflow_rule_widens_per_field():
     assert walk_bytes_per_request(1, 1, p.record_bytes) == 5 + 4
 
 
+def test_predict_record_bytes_matches_pack():
+    """The closed-form ``predict_record_bytes`` (used by core.tuning.sweep
+    to price walk bytes WITHOUT packing) agrees with the record width the
+    real packer chooses — for both the narrow and the forced-wide case."""
+    from repro.serve.pack import predict_record_bytes
+
+    gbt, _ = _fit(n_trees=3, max_depth=3, k=4)
+    packed = pack_trees(gbt)
+    n_feat = max(int(np.asarray(t.feat).max(initial=0)) + 1
+                 for t in gbt.trees)
+    n_bins = max(int(np.asarray(t.tbin).max(initial=0)) + 1
+                 for t in gbt.trees)
+    max_loff = int(np.asarray(packed.loff).max(initial=0))
+    assert predict_record_bytes(n_feat, n_bins, max_loff) == \
+        packed.record_bytes
+    # wide tbin forces an int16 field, exactly like pack_stacked
+    assert predict_record_bytes(4, 301, 1) == 5
+
+
 def test_pack_validates_sibling_pair_invariant():
     tables = dict(feat=np.array([[0, -1, -1]]), op=np.array([[0, -1, -1]]),
                   tbin=np.array([[1, -1, -1]]),
