@@ -13,7 +13,6 @@ import numpy as np
 
 from repro.core.histogram import node_histogram
 from repro.core.split import best_splits
-from repro.kernels import ref
 
 
 def _t(fn, reps=3):

@@ -23,13 +23,14 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import bench_selection, bench_udt_cls, bench_udt_reg
-from benchmarks import (bench_dist_goss, bench_goss, bench_kdd99,
-                        bench_kernels, bench_logistic, bench_serve_forest,
-                        bench_subtraction, bench_toot)
+from benchmarks import (bench_check, bench_dist_goss, bench_goss,
+                        bench_kdd99, bench_kernels, bench_logistic,
+                        bench_serve_forest, bench_subtraction, bench_toot)
 
 # every blocking gate, in dependency-light-first order; each entry is
 # (name, module) where module.gate() returns 0 (pass) / 1 (fail)
 GATES = (
+    ("check", bench_check),
     ("subtraction", bench_subtraction),
     ("goss", bench_goss),
     ("logistic", bench_logistic),

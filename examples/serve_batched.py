@@ -8,7 +8,6 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 sys.path.insert(0, "src")
 

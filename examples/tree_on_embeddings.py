@@ -36,8 +36,7 @@ tokens = np.where(y[:, None] == 0, lo, hi).astype(np.int32)
 
 @jax.jit
 def embed_docs(tokens):
-    logits = M.forward(params, cfg, {"tokens": tokens})
-    del logits
+    M.forward(params, cfg, {"tokens": tokens})  # full pass traces; DCE'd
     # mean-pooled embedding-table features (frozen)
     return M.L.embed(tokens, params["embed"]).mean(axis=1)
 

@@ -1,0 +1,18 @@
+"""``python -m repro.check`` — the blocking contract gate.
+
+Forces 8 host platform devices BEFORE jax is imported (and only when
+this process has not imported jax yet and the user has not set their own
+XLA_FLAGS), so the distributed contracts trace on a genuine 2x2 mesh.
+In-process callers that already hold a jax should use
+``repro.check.cli.main`` directly — the mesh contracts then fall back to
+a 1x1 mesh with identical budgets (see contracts.smoke_mesh).
+"""
+import os
+import sys
+
+if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+from repro.check.cli import main  # noqa: E402  (env must be set first)
+
+sys.exit(main())

@@ -1,0 +1,115 @@
+"""The contract-checker CLI body (``python -m repro.check``).
+
+Traces every registered contract at smoke shapes, applies its rules, and
+prints a per-contract pass/fail table — to stdout always, appended to
+``$GITHUB_STEP_SUMMARY`` when set (the same reporting convention as
+``benchmarks.run --gate``).  Exit status is nonzero if ANY contract
+fails, including contracts whose surface fails to *trace*: a
+``jax.device_get`` smuggled into a hot path raises at trace time rather
+than appearing in the jaxpr, and that is just as much a violation as a
+banned primitive.
+
+``__main__`` forces 8 host devices (when it owns the process) so the
+mesh contracts trace on a real 2x2 mesh; see contracts.smoke_mesh for
+why a 1x1 fallback checks the same budgets.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+__all__ = ["main", "run_contracts"]
+
+
+def run_contracts(only: str | None = None, verbose: bool = False):
+    """Trace + check every contract; returns (results, n_fail).
+
+    ``results`` is a list of (contract, violations, error) where
+    ``error`` is the formatted trace-time exception (None if the surface
+    traced) and ``violations`` the rule findings (empty on pass)."""
+    from repro.check.contracts import registry
+    from repro.check.rules import run_rules
+    results = []
+    for name, con in registry().items():
+        if only and only not in name:
+            continue
+        violations, error = [], None
+        try:
+            surface = con.build()
+            violations = run_rules(con.rules, surface)
+        except Exception:
+            error = traceback.format_exc()
+        results.append((con, violations, error))
+        if verbose:
+            status = "FAIL" if (violations or error) else "pass"
+            print(f"  {name}: {status}", flush=True)
+    n_fail = sum(1 for _, v, e in results if v or e)
+    return results, n_fail
+
+
+def _table(results) -> str:
+    rows = ["| contract | surface | rules | status |",
+            "| --- | --- | --- | --- |"]
+    for con, violations, error in results:
+        rules = "; ".join(r.describe() for r in con.rules)
+        if error:
+            status = "**FAIL** (trace error)"
+        elif violations:
+            status = f"**FAIL** ({len(violations)})"
+        else:
+            status = "pass"
+        rows.append(f"| {con.name} | `{con.surface}` | {rules} | {status} |")
+    return "\n".join(rows)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="trace every declared performance contract and "
+                    "enforce its rules (static analysis: nothing runs)")
+    ap.add_argument("--gate", action="store_true",
+                    help="CI alias: identical behaviour, kept so the gate "
+                         "invocation reads like the other bench gates")
+    ap.add_argument("--only", metavar="SUBSTR",
+                    help="check only contracts whose name contains SUBSTR")
+    ap.add_argument("--list", action="store_true",
+                    help="list contracts and rules without tracing")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print per-contract progress while tracing")
+    args = ap.parse_args(argv)
+
+    from repro.check.contracts import registry
+    if args.list:
+        for name, con in registry().items():
+            print(f"{name}  ->  {con.surface}")
+            for r in con.rules:
+                print(f"    - {r.describe()}")
+        return 0
+
+    results, n_fail = run_contracts(only=args.only, verbose=args.verbose)
+    if not results:
+        print(f"no contracts match --only {args.only!r}")
+        return 1
+
+    for con, violations, error in results:
+        if error:
+            print(f"\n--- {con.name} ({con.surface}): TRACE ERROR ---")
+            print(error.rstrip())
+        for v in violations:
+            print(f"\n--- {con.name} ({con.surface}) ---\n  {v}")
+
+    table = _table(results)
+    verdict = (f"{len(results)} contracts, {n_fail} failed" if n_fail
+               else f"all {len(results)} contracts hold")
+    print(f"\n{table}\n\ncheck-gate: {verdict}")
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(f"### Contract checks — {verdict}\n\n{table}\n")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,406 @@
+"""Declared performance contracts over the repo's real hot paths.
+
+Each ``@contract`` binds a named surface (the actual jitted function the
+training / serving loops call — never a lookalike) to the rules it must
+satisfy, and knows how to trace itself at smoke shapes.  Tracing is
+abstract evaluation: nothing executes, so the whole registry checks in
+seconds and the CLI (``python -m repro.check``) can run as a blocking CI
+gate.
+
+The budgets are exact, not headroom: the sharded level step is allowed
+precisely the collectives its design doc claims (ONE histogram-sized
+reduce_scatter, one small pair-count psum, the per-slot metadata
+all_gathers), the sampler precisely one scalar pmax per data axis, the
+walk and the TOOT grid precisely one int32 psum.  A new collective —
+even a cheap one — fails the gate until the contract is consciously
+re-declared, which is the point: collective structure is an API.
+
+Mesh contracts trace on a 2x2 ``(data, model)`` mesh when >= 4 devices
+exist and a 1x1 mesh otherwise — shard_map traces the SAME primitive
+sequence either way (tracing depends on axis names, not sizes), so the
+budgets hold under both; the CLI forces 8 host devices when it owns the
+process.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.check.rules import (CollectiveBudget, DonationCheck, DTypePolicy,
+                               NoDynamicShapes, NoHostTransfer, Rule,
+                               ScratchBudget, Surface)
+from repro.kernels.histogram import TPU_VMEM_BYTES
+
+__all__ = ["Contract", "contract", "registry", "smoke_mesh"]
+
+_REGISTRY: dict[str, "Contract"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """One declared contract: a named surface plus the rules that bind it.
+    ``build()`` traces the surface at smoke shapes and returns it."""
+    name: str
+    surface: str
+    rules: tuple
+    build: Callable[[], Surface] = dataclasses.field(compare=False)
+    doc: str = ""
+
+
+def contract(name: str, *, surface: str, rules: tuple[Rule, ...]):
+    """Register the decorated builder as contract ``name``.
+
+    ``surface`` is the dotted path of the real function under contract
+    (documentation + the table's first column); ``rules`` are applied to
+    whatever ``Surface`` the builder returns."""
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"duplicate contract {name!r}")
+        _REGISTRY[name] = Contract(name=name, surface=surface,
+                                   rules=tuple(rules), build=fn,
+                                   doc=(fn.__doc__ or "").strip())
+        return fn
+    return deco
+
+
+def registry() -> dict[str, Contract]:
+    """Name -> Contract, declaration order (dicts preserve insertion)."""
+    return dict(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# shared smoke-shape machinery
+# --------------------------------------------------------------------------
+
+# local chunk-step smoke shapes (the same regime the jaxpr tests use:
+# small enough to trace in milliseconds, big enough that nothing folds)
+_M, _K, _B, _C, _S, _NODES = 64, 3, 8, 2, 8, 64
+
+
+def smoke_mesh():
+    """A (data, model) mesh for contract tracing: 2x2 when the process
+    has >= 4 devices (the CLI forces 8), else 1x1.  Axis NAMES drive the
+    trace, so collective budgets are identical on both."""
+    import jax
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = 4 if len(devs) >= 4 else 1
+    side = 2 if n == 4 else 1
+    return Mesh(np.asarray(devs[:n]).reshape(side, side), ("data", "model"))
+
+
+def _chunk_args(rng, *, m=_M, k=_K, b=_B, c=_C, s=_S, max_nodes=_NODES):
+    import jax.numpy as jnp
+    from repro.core.tree import _init_arrays
+    return (jnp.asarray(rng.integers(0, b, size=(m, k)), jnp.int32),
+            jnp.asarray(np.eye(c, dtype=np.float32)[
+                rng.integers(0, c, size=m)]),
+            jnp.zeros((m,), jnp.int32),                 # lbins
+            jnp.zeros((m,), jnp.float32),               # y
+            jnp.asarray(rng.integers(0, s, size=m), jnp.int32),  # assign
+            _init_arrays(max_nodes),
+            jnp.ones((s // 2, k, b, c), jnp.float32),   # phist_pairs
+            jnp.full((k,), b, jnp.int32),               # n_num
+            jnp.zeros((k,), jnp.int32),                 # n_cat
+            jnp.int32(0), jnp.int32(s), jnp.int32(s), jnp.int32(2))
+
+
+def _chunk_kw(**over):
+    kw = dict(num_slots=_S, n_bins=_B, heuristic="info_gain",
+              task="classification", min_samples_split=2,
+              min_samples_leaf=1, max_depth=5, max_nodes=_NODES,
+              hist_backend="segment", select_backend="jnp", n_label_bins=1,
+              use_sub=True, want_hist=True)
+    kw.update(over)
+    return kw
+
+
+# rules shared by every single-device training surface: device-resident,
+# collective-free, f32/int32 only, statically shaped
+_LOCAL_RULES = (CollectiveBudget(), NoHostTransfer(), DTypePolicy(),
+                NoDynamicShapes())
+
+
+# --------------------------------------------------------------------------
+# core: the level-chunk steps (single tree, class-batched, pallas-fused)
+# --------------------------------------------------------------------------
+
+@contract("core/chunk-step", surface="core.tree._chunk_step",
+          rules=_LOCAL_RULES)
+def _build_chunk_step() -> Surface:
+    """The single-device level-chunk step (histogram -> Superfast
+    Selection -> node updates) with sibling subtraction on: one device,
+    so ZERO collectives and no host round-trips anywhere in the trace."""
+    import jax
+    from repro.core.tree import _chunk_step
+    rng = np.random.default_rng(0)
+    kw = _chunk_kw()
+    jaxpr = jax.make_jaxpr(
+        lambda *a: _chunk_step(*a, **kw))(*_chunk_args(rng))
+    return Surface(jaxpr=jaxpr, label="core/chunk-step")
+
+
+@contract("core/chunk-step-batched", surface="core.tree._chunk_step_classes",
+          rules=_LOCAL_RULES)
+def _build_chunk_step_batched() -> Surface:
+    """The class-batched (multiclass softmax round) level-chunk step: one
+    vmap of the SAME _chunk_step_impl over a leading class axis.  vmap
+    must add batching, never collectives or host transfers."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.tree import _chunk_step_classes, _init_arrays
+    rng = np.random.default_rng(1)
+    n_cls, m, k, b, s, nodes = 3, _M, _K, _B, _S, _NODES
+    arrays = {f: jnp.broadcast_to(v[None], (n_cls,) + v.shape)
+              for f, v in _init_arrays(nodes).items()}
+    args = (jnp.asarray(rng.integers(0, b, size=(m, k)), jnp.int32),
+            jnp.asarray(rng.normal(size=(m, 3)), jnp.float32),  # moment stats
+            jnp.zeros((m,), jnp.int32),
+            jnp.asarray(rng.normal(size=(n_cls, m)), jnp.float32),  # z [C,M]
+            jnp.asarray(rng.integers(0, s, size=(n_cls, m)), jnp.int32),
+            arrays,
+            jnp.ones((n_cls, s // 2, k, b, 3), jnp.float32),
+            jnp.full((k,), b, jnp.int32), jnp.zeros((k,), jnp.int32),
+            jnp.zeros((n_cls,), jnp.int32),            # chunk_start [C]
+            jnp.full((n_cls,), s, jnp.int32),          # chunk_n [C]
+            jnp.full((n_cls,), s, jnp.int32),          # next_free [C]
+            jnp.int32(2))
+    kw = _chunk_kw(task="regression_variance")
+    jaxpr = jax.make_jaxpr(
+        lambda *a: _chunk_step_classes(*a, **kw))(*args)
+    return Surface(jaxpr=jaxpr, label="core/chunk-step-batched")
+
+
+@contract("core/chunk-step-pallas", surface="core.tree._chunk_step[pallas]",
+          rules=(ScratchBudget(TPU_VMEM_BYTES, require_pallas=True),
+                 CollectiveBudget(), NoHostTransfer(), NoDynamicShapes()))
+def _build_chunk_step_pallas() -> Surface:
+    """The pallas-backed chunk step: the histogram (and the fused sibling
+    epilogue) must actually BE a pallas_call — no silent fallback to the
+    XLA scatter — and its resident VMEM blocks must fit the TPU cap."""
+    import jax
+    from repro.core.tree import _chunk_step
+    rng = np.random.default_rng(2)
+    kw = _chunk_kw(hist_backend="pallas")
+    jaxpr = jax.make_jaxpr(
+        lambda *a: _chunk_step(*a, **kw))(*_chunk_args(rng))
+    return Surface(jaxpr=jaxpr, label="core/chunk-step-pallas")
+
+
+# --------------------------------------------------------------------------
+# distributed: the sharded level step, sampler, walk, and TOOT grid
+# --------------------------------------------------------------------------
+
+@contract(
+    "dist/level-step", surface="core.distributed.make_sharded_step",
+    rules=(CollectiveBudget(
+               allowed={"reduce_scatter": dict(max=1),
+                        "psum": dict(max=1, dtype="float32"),
+                        "all_gather": dict(max=11, max_rank=3)},
+               max_bulk=1, bulk_rank=4),
+           NoHostTransfer(), DTypePolicy(), NoDynamicShapes()))
+def _build_dist_level_step() -> Surface:
+    """The sharded level step with subtraction x slot_scatter composed:
+    exactly ONE histogram-sized collective per level chunk (the packed
+    smaller-child reduce_scatter — rank 4), one small f32 pair-count
+    psum, and only small (rank <= 3) per-slot metadata all_gathers.
+    Every gather/permute row-movement primitive is banned outright."""
+    import jax
+    from repro.core.distributed import DistConfig, make_sharded_step
+    mesh = smoke_mesh()
+    dist = DistConfig(data_axes=("data",), model_axis="model")
+    kw = dict(n_bins=_B, heuristic="info_gain", task="classification",
+              min_samples_split=2, min_samples_leaf=1, max_depth=5,
+              max_nodes=_NODES, hist_backend="segment",
+              select_backend="jnp", n_label_bins=1, min_child_weight=0.0)
+    fn = make_sharded_step(mesh, dist, kw, _S, use_sub=True, want_hist=True)
+    rng = np.random.default_rng(3)
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a))(*_chunk_args(rng, k=4))
+    return Surface(jaxpr=jaxpr, label="dist/level-step")
+
+
+@contract(
+    "dist/goss-sampler", surface="core.distributed.make_sharded_sampler",
+    rules=(CollectiveBudget(allowed={"pmax": dict(max=1, scalar=True)}),
+           NoHostTransfer(), DTypePolicy(), NoDynamicShapes()))
+def _build_dist_sampler() -> Surface:
+    """The sharded GOSS draw: per-shard-quota top_k merged by ONE scalar
+    pmax per data axis.  No cross-shard row traffic of any spelling
+    (all_to_all / ppermute / all_gather / pgather / ragged_all_to_all /
+    all_gather_invariant), no other collective at all."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.distributed import DistConfig, make_sharded_sampler
+    from repro.core.forest import GossConfig
+    from repro.core.losses import get_loss
+    mesh = smoke_mesh()
+    dist = DistConfig(data_axes=("data",), model_axis="model")
+    goss = GossConfig(0.2, 0.2)
+    d_shards = mesh.shape["data"]
+    m = _M
+    q_top, q_oth = goss.shard_quota(m, d_shards)
+    fn = make_sharded_sampler(mesh, dist, get_loss("logistic"), goss,
+                              m, q_top, q_oth)
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a))(
+        jnp.zeros((m,), jnp.float32), jnp.zeros((m,), jnp.float32),
+        jax.random.PRNGKey(0))
+    return Surface(jaxpr=jaxpr, label="dist/goss-sampler")
+
+
+@contract(
+    "dist/ensemble-walk", surface="core.distributed.make_sharded_walk",
+    rules=(CollectiveBudget(allowed={"psum": dict(max=1, dtype="int32")}),
+           NoHostTransfer(), DTypePolicy(), NoDynamicShapes()))
+def _build_dist_walk() -> Surface:
+    """The sharded raw-score update walk: the feature-parallel node
+    predicate costs exactly one int32 psum (one bit per example over the
+    model axis); raw scores never leave their data shard."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.distributed import DistConfig, make_sharded_walk
+    from repro.core.tree import _init_arrays
+    mesh = smoke_mesh()
+    dist = DistConfig(data_axes=("data",), model_axis="model")
+    fn = make_sharded_walk(mesh, dist, num_steps=4)
+    rng = np.random.default_rng(4)
+    k = 4
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a))(
+        jnp.zeros((_M,), jnp.float32), _init_arrays(_NODES),
+        jnp.asarray(rng.integers(0, _B, size=(_M, k)), jnp.int32),
+        jnp.full((k,), _B, jnp.int32), jnp.float32(0.3))
+    return Surface(jaxpr=jaxpr, label="dist/ensemble-walk")
+
+
+@contract(
+    "dist/grid-counts", surface="core.distributed.make_sharded_grid_counts",
+    rules=(CollectiveBudget(allowed={"psum": dict(max=1, dtype="int32")}),
+           NoHostTransfer(), DTypePolicy(), NoDynamicShapes()))
+def _build_dist_grid_counts() -> Surface:
+    """The sharded TOOT design-space kernel: each shard prices its grid
+    slice locally; exactly ONE int32 psum (order-independent, hence
+    bit-identical to the local grid) totals the correct-prediction
+    counts.  Collective bytes independent of M."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.distributed import DistConfig, make_sharded_grid_counts
+    mesh = smoke_mesh()
+    dist = DistConfig(data_axes=("data",), model_axis="model")
+    fn = make_sharded_grid_counts(mesh, dist, classification=True)
+    rng = np.random.default_rng(5)
+    m, t = _M, 4
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a))(
+        jnp.asarray(rng.integers(0, 2, size=(m, t)), jnp.float32),
+        jnp.asarray(rng.integers(1, 50, size=(m, t)), jnp.int32),
+        jnp.asarray(rng.uniform(0, 9, size=(m, t)), jnp.float32),
+        jnp.asarray(rng.integers(0, 2, size=m), jnp.float32),
+        jnp.ones((m,), bool),
+        jnp.asarray([2, 8], jnp.int32),
+        jnp.asarray([0.0, 1.0], jnp.float32),
+        jnp.asarray([3, 5], jnp.int32))
+    return Surface(jaxpr=jaxpr, label="dist/grid-counts")
+
+
+# --------------------------------------------------------------------------
+# TOOT: the local ensemble sweep scan
+# --------------------------------------------------------------------------
+
+@contract("toot/sweep-scan", surface="core.tuning._ensemble_grid_counts",
+          rules=_LOCAL_RULES)
+def _build_toot_sweep() -> Surface:
+    """The boosted-ensemble design-space scan (lax.scan over rounds,
+    lax.map over the dmax axis): single-device pricing of the whole
+    grid, so collective-free, host-transfer-free, f32/int32 only."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.tuning import _ensemble_grid_counts
+    rng = np.random.default_rng(6)
+    r, m, t = 2, 32, 4
+    jaxpr = jax.make_jaxpr(
+        lambda *a: _ensemble_grid_counts(*a, logistic=True))(
+        jnp.asarray(rng.normal(size=(r, m, t)), jnp.float32),
+        jnp.asarray(rng.integers(1, 50, size=(r, m, t)), jnp.int32),
+        jnp.asarray(rng.uniform(0, 9, size=(r, m, t)), jnp.float32),
+        jnp.asarray(rng.integers(0, 2, size=m), jnp.float32),
+        jnp.ones((m,), bool),
+        jnp.asarray([2, 8], jnp.int32),
+        jnp.asarray([0.0, 1.0], jnp.float32),
+        jnp.asarray([3, 5], jnp.int32),
+        jnp.float32(0.3), jnp.float32(0.0))
+    return Surface(jaxpr=jaxpr, label="toot/sweep-scan")
+
+
+# --------------------------------------------------------------------------
+# serve: the routed walk and the donated batch executable
+# --------------------------------------------------------------------------
+
+def _smoke_registry():
+    """A tiny two-tenant registry over synthetic packed stumps (no fit:
+    contracts must trace in milliseconds)."""
+    from repro.serve.pack import pack_stacked
+    from repro.serve.registry import ModelRegistry
+    t, n = 2, 8
+    feat = np.full((t, n), -1, np.int64)
+    op = np.full((t, n), -1, np.int64)
+    tbin = np.full((t, n), -1, np.int64)
+    left = np.full((t, n), -1, np.int64)
+    right = np.full((t, n), -1, np.int64)
+    leaf = np.ones((t, n), bool)
+    label = np.zeros((t, n), np.float32)
+    feat[:, 0], op[:, 0], tbin[:, 0] = 0, 0, 3
+    left[:, 0], right[:, 0], leaf[:, 0] = 1, 2, False
+    label[:, 1], label[:, 2] = -1.0, 1.0
+    tables = dict(feat=feat, op=op, tbin=tbin, left=left, right=right,
+                  leaf=leaf, label=label)
+    meta = dict(learning_rate=0.3, base=0.0, link_id=0, num_steps=3,
+                loss="squared")
+    packed = pack_stacked(tables, np.full((4,), 8, np.int32), meta)
+    reg = ModelRegistry(capacity=2)
+    reg.add("tenant-a", packed)
+    reg.add("tenant-b", packed)
+    return reg
+
+
+@contract("serve/routed-walk", surface="serve.registry.routed_forest_walk",
+          rules=_LOCAL_RULES)
+def _build_routed_walk() -> Surface:
+    """The mixed-tenant routed forest walk: pure gathers + elementwise
+    math in a fori_loop — no collectives, no host transfers, and every
+    shape static so one executable serves a whole bucket."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve.registry import routed_forest_walk
+    reg = _smoke_registry()
+    rng = np.random.default_rng(7)
+    b = 8
+    jaxpr = jax.make_jaxpr(
+        lambda tb, bins, gids: routed_forest_walk(
+            tb, bins, gids, num_steps=reg.num_steps))(
+        reg.tables,
+        jnp.asarray(rng.integers(0, 8, size=(b, 4)), jnp.int32),
+        jnp.asarray(rng.integers(0, 2, size=b), jnp.int32))
+    return Surface(jaxpr=jaxpr, label="serve/routed-walk")
+
+
+@contract("serve/batched-exec", surface="serve.batching.serve_lowering",
+          rules=(DonationCheck(min_donated=1), CollectiveBudget(),
+                 NoHostTransfer()))
+def _build_serve_exec() -> Surface:
+    """The production bucket executable, lowered exactly as
+    ForestServer._get_exec compiles it: the padded bin buffer must be
+    donated (input/output aliasing in the StableHLO) so steady-state
+    serving reuses its memory instead of allocating per flush."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve.batching import serve_lowering
+    from repro.serve.registry import routed_forest_walk
+    reg = _smoke_registry()
+    lowered = serve_lowering(reg, bucket=8)
+    k_cap = reg.tables["n_num"].shape[1]
+    jaxpr = jax.make_jaxpr(
+        lambda tb, bins, gids: routed_forest_walk(
+            tb, bins, gids, num_steps=reg.num_steps))(
+        reg.tables,
+        jnp.zeros((8, k_cap), jnp.int32), jnp.zeros((8,), jnp.int32))
+    return Surface(jaxpr=jaxpr, lowered=lowered, label="serve/batched-exec")

@@ -1,0 +1,372 @@
+"""Performance-contract rules checked against traced surfaces.
+
+A :class:`Surface` is a traced function — its jaxpr plus (optionally) its
+lowering.  A :class:`Rule` inspects a surface and returns
+:class:`Violation` records; an empty list means the contract holds.
+
+The rules here encode the repo's structural performance claims:
+
+* :class:`CollectiveBudget` — which cross-device collectives a surface
+  may contain, how many of each, and at what operand dtype/rank.  The
+  canonical banned set (:data:`BANNED_GATHER_PRIMS`) covers every
+  gather/permute spelling jax has used, including newer ones
+  (``all_gather_invariant``, ``pgather``, ``ragged_all_to_all``) that
+  older hand-rolled test lists missed.
+* :class:`NoHostTransfer` — no callbacks / infeed / outfeed / device_put
+  inside a hot trace (host round-trips serialize the device).
+* :class:`DTypePolicy` — no accidental wide dtypes (f64 doubles every
+  histogram byte and halves VPU throughput).
+* :class:`NoDynamicShapes` — every aval dimension is a concrete int, so
+  one compile serves the whole workload.
+* :class:`DonationCheck` — serve buffers really are donated (the lowering
+  carries input/output aliasing, so steady-state serving is allocation
+  free).
+* :class:`ScratchBudget` — a Pallas kernel's resident VMEM blocks
+  (estimated from the kernel jaxpr's ref avals) fit the backend's cap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Iterable
+
+from repro.check.walker import collect_avals, iter_eqns
+
+__all__ = ["Surface", "Violation", "Rule", "CollectiveBudget",
+           "NoHostTransfer", "DTypePolicy", "NoDynamicShapes",
+           "DonationCheck", "ScratchBudget", "COLLECTIVE_PRIMS",
+           "BANNED_GATHER_PRIMS", "HOST_TRANSFER_PRIMS",
+           "pallas_vmem_bytes"]
+
+# every collective primitive name jax emits from lax.p* / shard_map ops
+# (axis_index is deliberately absent: it reads the mesh coordinate and
+# moves no bytes between devices)
+COLLECTIVE_PRIMS = frozenset({
+    "psum", "pmax", "pmin", "pbroadcast", "ppermute", "pgather",
+    "all_to_all", "all_gather", "all_gather_invariant",
+    "reduce_scatter", "psum_scatter", "ragged_all_to_all",
+})
+
+# the canonical cross-device row-movement set: anything here gathers or
+# permutes example rows across shards, which the sharded sampler and
+# level loop are contractually forbidden from doing.  Includes the newer
+# spellings (all_gather_invariant, pgather, ragged_all_to_all) that the
+# old per-test banned lists missed.
+BANNED_GATHER_PRIMS = frozenset({
+    "all_to_all", "ppermute", "pgather",
+    "all_gather", "all_gather_invariant", "ragged_all_to_all",
+})
+
+# primitives that force a host round-trip or host-driven transfer
+HOST_TRANSFER_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "outside_call", "infeed", "outfeed", "device_put", "copy_to_host",
+})
+
+
+@dataclasses.dataclass
+class Surface:
+    """A traced function under contract.
+
+    ``jaxpr`` is a ``ClosedJaxpr`` (or ``Jaxpr``); ``lowered`` is the
+    optional ``jax.stages.Lowered`` for rules that need the StableHLO
+    text (donation).  ``label`` names the surface in violation messages.
+    """
+    jaxpr: Any
+    lowered: Any = None
+    label: str = ""
+
+    def eqns(self, *, enter_pallas: bool = True):
+        return iter_eqns(self.jaxpr, enter_pallas=enter_pallas)
+
+    def avals(self, *, enter_pallas: bool = True):
+        return collect_avals(self.jaxpr, enter_pallas=enter_pallas)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.message}"
+
+
+class Rule:
+    """Base class: ``check(surface) -> list[Violation]``."""
+
+    name = "rule"
+
+    def check(self, surface: Surface) -> list[Violation]:
+        raise NotImplementedError
+
+    def _v(self, message: str) -> Violation:
+        return Violation(self.name, message)
+
+    def describe(self) -> str:
+        """One-line human summary for the contract table."""
+        return self.name
+
+
+def _aval_ndim(v) -> int:
+    return len(getattr(getattr(v, "aval", None), "shape", ()) or ())
+
+
+def _aval_dtype(v) -> str:
+    return str(getattr(getattr(v, "aval", None), "dtype", "?"))
+
+
+class CollectiveBudget(Rule):
+    """Allowed collectives with per-primitive budgets; everything else in
+    :data:`COLLECTIVE_PRIMS` (plus ``banned``) is a violation.
+
+    ``allowed`` maps primitive name -> spec, where spec is an int max
+    count or a dict with optional keys:
+
+    * ``max`` — maximum occurrences (default: unlimited),
+    * ``dtype`` — required operand dtype prefix (e.g. ``"int32"``),
+    * ``scalar`` — operands must be rank 0 (thresholds, not rows),
+    * ``max_rank`` — maximum operand rank.
+
+    ``max_bulk`` additionally caps how many collectives (of any allowed
+    kind) may touch an operand of rank >= ``bulk_rank`` — the
+    "exactly one histogram-sized collective per level" contract,
+    independent of which primitive carries it."""
+
+    name = "collective-budget"
+
+    def __init__(self, allowed: dict[str, Any] | None = None, *,
+                 banned: Iterable[str] = BANNED_GATHER_PRIMS,
+                 max_bulk: int | None = None, bulk_rank: int = 4):
+        self.allowed = {k: ({"max": v} if isinstance(v, int) else dict(v))
+                        for k, v in (allowed or {}).items()}
+        self.banned = frozenset(banned) - set(self.allowed)
+        self.max_bulk = max_bulk
+        self.bulk_rank = bulk_rank
+
+    def describe(self) -> str:
+        if not self.allowed:
+            return "no collectives"
+        parts = []
+        for prim, spec in sorted(self.allowed.items()):
+            p = prim
+            if "max" in spec:
+                p += f" x{spec['max']}"
+            if spec.get("dtype"):
+                p += f" {spec['dtype']}"
+            if spec.get("scalar"):
+                p += " scalar"
+            parts.append(p)
+        s = ", ".join(parts)
+        if self.max_bulk is not None:
+            s += f"; <={self.max_bulk} bulk (rank>={self.bulk_rank})"
+        return s
+
+    def check(self, surface: Surface) -> list[Violation]:
+        out, counts, bulk = [], {}, 0
+        for eqn in surface.eqns(enter_pallas=False):
+            prim = eqn.primitive.name
+            if prim in self.allowed:
+                spec = self.allowed[prim]
+                counts[prim] = counts.get(prim, 0) + 1
+                for v in eqn.invars:
+                    nd = _aval_ndim(v)
+                    if spec.get("scalar") and nd != 0:
+                        out.append(self._v(
+                            f"{prim} operand must be scalar, got rank {nd}"))
+                    if "max_rank" in spec and nd > spec["max_rank"]:
+                        out.append(self._v(
+                            f"{prim} operand rank {nd} > "
+                            f"max_rank {spec['max_rank']}"))
+                    dt = spec.get("dtype")
+                    if dt and not _aval_dtype(v).startswith(dt):
+                        out.append(self._v(
+                            f"{prim} operand dtype {_aval_dtype(v)}, "
+                            f"contract says {dt}"))
+                if any(_aval_ndim(v) >= self.bulk_rank for v in eqn.invars):
+                    bulk += 1
+            elif prim in self.banned or prim in COLLECTIVE_PRIMS:
+                out.append(self._v(f"banned collective: {prim}"))
+        for prim, spec in self.allowed.items():
+            if "max" in spec and counts.get(prim, 0) > spec["max"]:
+                out.append(self._v(
+                    f"{prim} appears {counts[prim]}x, budget {spec['max']}"))
+        if self.max_bulk is not None and bulk > self.max_bulk:
+            out.append(self._v(
+                f"{bulk} bulk collectives (operand rank >= "
+                f"{self.bulk_rank}), budget {self.max_bulk}"))
+        return out
+
+
+class NoHostTransfer(Rule):
+    """No host callbacks / infeed / outfeed / device_put in the trace.
+
+    Host transfers inside a hot loop serialize every device behind the
+    Python thread; a ``jax.device_get`` on a traced value does not even
+    reach the jaxpr — it raises at trace time, which the contract runner
+    reports as a trace failure (still a violation of this contract)."""
+
+    name = "no-host-transfer"
+
+    def __init__(self, banned: Iterable[str] = HOST_TRANSFER_PRIMS):
+        self.banned = frozenset(banned)
+
+    def describe(self) -> str:
+        return "no host callbacks / transfers"
+
+    def check(self, surface: Surface) -> list[Violation]:
+        return [self._v(f"host-transfer primitive: {e.primitive.name}")
+                for e in surface.eqns() if e.primitive.name in self.banned]
+
+
+class DTypePolicy(Rule):
+    """No aval anywhere in the trace may use a banned dtype.
+
+    Default bans f64 (doubles histogram bytes, halves VPU throughput —
+    only reachable when someone flips ``jax_enable_x64``) and complex.
+    Pass e.g. ``banned=("float64", "int64", "float16")`` to tighten."""
+
+    name = "dtype-policy"
+
+    def __init__(self, banned: Iterable[str] = ("float64", "complex64",
+                                                "complex128")):
+        self.banned = tuple(banned)
+
+    def describe(self) -> str:
+        return "no " + "/".join(self.banned)
+
+    def check(self, surface: Surface) -> list[Violation]:
+        hits = set()
+        for av in surface.avals():
+            dt = str(getattr(av, "dtype", ""))
+            for b in self.banned:
+                if dt == b:
+                    hits.add(dt)
+        return [self._v(f"banned dtype in trace: {dt}")
+                for dt in sorted(hits)]
+
+
+class NoDynamicShapes(Rule):
+    """Every dimension of every aval is a concrete Python int.
+
+    A symbolic/tracer dimension means shape polymorphism leaked in and
+    the one-compile-per-shape serving story is gone."""
+
+    name = "no-dynamic-shapes"
+
+    def describe(self) -> str:
+        return "all shapes static"
+
+    def check(self, surface: Surface) -> list[Violation]:
+        out = []
+        for av in surface.avals():
+            shape = getattr(av, "shape", ())
+            for d in shape:
+                if not isinstance(d, (int,)) or isinstance(d, bool):
+                    out.append(self._v(
+                        f"non-static dim {d!r} ({type(d).__name__}) "
+                        f"in shape {shape}"))
+                    break
+        return out
+
+
+class DonationCheck(Rule):
+    """The lowering donates >= ``min_donated`` input buffers.
+
+    Primary source: ``Lowered.args_info`` donated flags — these record
+    donation even when XLA cannot alias the buffer to an output (the
+    serve walk's int32 bins can never alias its f32 scores, but the
+    donated buffer is still freed early on accelerators).  The StableHLO
+    ``tf.aliasing_output`` / ``jax.buffer_donor`` markers count too, for
+    lowerings where aliasing does land.  Zero of either means the serve
+    path holds its input buffers for the whole execution."""
+
+    name = "donation"
+
+    MARKERS = ("tf.aliasing_output", "jax.buffer_donor")
+
+    def __init__(self, min_donated: int = 1):
+        self.min_donated = min_donated
+
+    def describe(self) -> str:
+        return f">={self.min_donated} donated buffer(s)"
+
+    def check(self, surface: Surface) -> list[Violation]:
+        if surface.lowered is None:
+            return [self._v("no lowering attached to surface "
+                            "(contract must trace with .lower())")]
+        import jax.tree_util as jtu
+        leaves = jtu.tree_leaves(
+            getattr(surface.lowered, "args_info", None),
+            is_leaf=lambda x: hasattr(x, "donated"))
+        n = sum(1 for leaf in leaves if getattr(leaf, "donated", False))
+        if n < self.min_donated:
+            text = surface.lowered.as_text()
+            n = sum(text.count(m) for m in self.MARKERS)
+        if n < self.min_donated:
+            return [self._v(f"{n} donated buffers in lowering, "
+                            f"contract requires >= {self.min_donated}")]
+        return []
+
+
+def pallas_vmem_bytes(eqn) -> int:
+    """Estimated resident VMEM for one ``pallas_call``: the sum of the
+    kernel jaxpr's ref avals (input blocks + output blocks + scratch).
+    A lower bound — Mosaic may double-buffer pipelined blocks — but the
+    right order of magnitude to budget against a ~16 MB/core VMEM."""
+    inner = eqn.params.get("jaxpr")
+    if inner is None:
+        return 0
+    total = 0
+    for v in inner.invars:
+        av = getattr(v, "aval", None)
+        shape = getattr(av, "shape", None)
+        dtype = getattr(av, "dtype", None)
+        if shape is None or dtype is None:
+            continue
+        total += int(math.prod(shape)) * int(getattr(dtype, "itemsize", 4))
+    return total
+
+
+class ScratchBudget(Rule):
+    """Every ``pallas_call`` in the trace fits ``cap_bytes`` of VMEM
+    (estimated via :func:`pallas_vmem_bytes`).  With ``require_pallas``
+    the surface must contain at least one kernel — guarding the claim
+    that the cheap path IS the traced path, not silently falling back
+    to an XLA scatter."""
+
+    name = "scratch-budget"
+
+    def __init__(self, cap_bytes: int, *, require_pallas: bool = False):
+        self.cap_bytes = int(cap_bytes)
+        self.require_pallas = require_pallas
+
+    def describe(self) -> str:
+        s = f"kernel blocks <= {self.cap_bytes // 1024} KiB VMEM"
+        if self.require_pallas:
+            s += ", kernel required"
+        return s
+
+    def check(self, surface: Surface) -> list[Violation]:
+        out, seen = [], 0
+        for eqn in surface.eqns(enter_pallas=False):
+            if eqn.primitive.name != "pallas_call":
+                continue
+            seen += 1
+            est = pallas_vmem_bytes(eqn)
+            if est > self.cap_bytes:
+                out.append(self._v(
+                    f"pallas_call resident blocks ~{est} B "
+                    f"> cap {self.cap_bytes} B"))
+        if self.require_pallas and seen == 0:
+            out.append(self._v("no pallas_call in trace — kernel path "
+                               "fell back to plain XLA"))
+        return out
+
+
+def run_rules(rules: Iterable[Rule], surface: Surface) -> list[Violation]:
+    """Apply every rule to one surface; concatenated violations."""
+    out: list[Violation] = []
+    for rule in rules:
+        out.extend(rule.check(surface))
+    return out

@@ -14,10 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import heuristics as H
-from repro.core.split import OP_LE, OP_GT, OP_EQ, NEG_INF
+from repro.core.split import NEG_INF
 
 __all__ = ["generic_best_split_on_feature"]
-
 
 @functools.partial(jax.jit, static_argnames=("n_classes", "n_bins", "heuristic",
                                               "min_leaf"))
@@ -31,7 +30,7 @@ def generic_best_split_on_feature(xbin, labels, n_num, n_cat, *, n_classes,
     no prefix sums).  Returns (score, bin, op).
     """
     h_fn = H.get(heuristic)
-    m = xbin.shape[0]
+
     onehot = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32)  # [M,C]
     is_num_x = xbin < n_num
 

@@ -11,7 +11,6 @@ across candidates so it cancels.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 __all__ = ["info_gain", "gini", "chi_square", "sse_gain", "get", "HEURISTICS"]

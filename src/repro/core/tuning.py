@@ -627,7 +627,7 @@ def prune_stats(tree: Tree, dmax: int, smin: int, mcw: float = 0.0):
     hyper-parameters), computed host-side by BFS — reporting parity with the
     paper's 'tuned tree' columns, and the oracle ``_cost_grids`` must match
     cell-for-cell (tests/test_tuning.py)."""
-    feat = np.asarray(tree.feat); left = np.asarray(tree.left)
+    left = np.asarray(tree.left)
     right = np.asarray(tree.right); leaf = np.asarray(tree.leaf)
     count = np.asarray(tree.count); depth = np.asarray(tree.depth)
     n, max_d, stack = 0, 0, [0]

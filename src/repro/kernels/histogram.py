@@ -60,9 +60,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["histogram_pallas", "DEFAULT_EXAMPLE_TILE"]
+__all__ = ["histogram_pallas", "DEFAULT_EXAMPLE_TILE", "TPU_VMEM_BYTES"]
 
 DEFAULT_EXAMPLE_TILE = 512
+
+# per-core VMEM on current TPU generations (~16 MB; see the accelerator
+# memory hierarchy: HBM -> VMEM -> compute).  Every pallas_call's resident
+# blocks (input tiles + output block + scratch) must fit well under this;
+# repro.check's ScratchBudget rule estimates each kernel's block bytes
+# from its traced ref avals against this cap, so a BlockSpec / tile-size
+# change that would spill VMEM fails the check-gate instead of Mosaic.
+TPU_VMEM_BYTES = 16 * 2 ** 20
 
 
 def _hist_kernel(bins_ref, stats_t_ref, slot_ref, *refs,
@@ -78,10 +86,10 @@ def _hist_kernel(bins_ref, stats_t_ref, slot_ref, *refs,
     # fused mode accumulates in scratch so the output ref can hold the
     # interleaved [C, 2*Sc*B] block written once by the epilogue
     acc_ref = refs.pop(0) if fused else out_ref
-    k_i = pl.program_id(0)      # feature        (unused: blocks pre-sliced)
+    # grid axis 0 is the feature (its blocks are pre-sliced, so the
+    # kernel never reads that program id)
     sc = pl.program_id(1)       # slot chunk
     t = pl.program_id(2)        # example tile (innermost, sequential)
-    del k_i
 
     @pl.when(t == 0)
     def _init():

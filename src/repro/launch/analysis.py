@@ -24,7 +24,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
 
 PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
 HBM_BW = 819e9               # bytes/s per chip

@@ -24,7 +24,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.launch.mesh import make_smoke_mesh, make_production_mesh, mesh_axes

@@ -15,7 +15,6 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.models.sharding import MeshAxes, cache_specs, param_specs
 from repro.train import init_train_state
-from repro.train.optimizer import adamw_init
 
 
 def _sds(shape, dtype):

@@ -49,7 +49,7 @@ def synthetic_lm_batch(cfg, batch, seq, step, *, seed=17):
 
 
 def train_udt(args):
-    from repro.core import fit_bins, build_tree, TreeConfig, predict_bins, tune
+    from repro.core import fit_bins, build_tree, predict_bins, tune
     from repro.core import transform
     from repro.data import make_dataset, train_val_test_split
     cols, y, c = make_dataset(args.dataset, scale=args.scale)

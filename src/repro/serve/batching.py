@@ -46,7 +46,32 @@ import numpy as np
 
 from repro.serve.registry import ModelRegistry, routed_forest_walk
 
-__all__ = ["BatchPolicy", "ForestServer", "PendingRequest"]
+__all__ = ["BatchPolicy", "ForestServer", "PendingRequest",
+           "serve_lowering"]
+
+
+def serve_lowering(registry: ModelRegistry, bucket: int):
+    """The (uncompiled) lowering of one bucket's serve executable.
+
+    ONE definition of the serve entry point: ``ForestServer._get_exec``
+    compiles exactly this lowering, and ``repro.check``'s serve donation
+    contract inspects its StableHLO for the input/output aliasing marker
+    — so the donated-buffer claim is checked against the very lowering
+    production serves, not a lookalike."""
+    steps = registry.num_steps
+    k_cap = registry.tables["n_num"].shape[1]
+
+    def serve_fn(tables, bins, gids):
+        return routed_forest_walk(tables, bins, gids, num_steps=steps)
+
+    with warnings.catch_warnings():
+        # CPU ignores buffer donation and warns at lowering time;
+        # donation is for the accelerator path.
+        warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+        return (jax.jit(serve_fn, donate_argnums=(1,))
+                .lower(registry.tables,
+                       jax.ShapeDtypeStruct((bucket, k_cap), jnp.int32),
+                       jax.ShapeDtypeStruct((bucket,), jnp.int32)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,23 +143,7 @@ class ForestServer:
         key = (bucket, self.registry.shape_sig)
         compiled = self._exec.get(key)
         if compiled is None:
-            steps = self.registry.num_steps
-            k_cap = self.registry.tables["n_num"].shape[1]
-
-            def serve_fn(tables, bins, gids):
-                return routed_forest_walk(tables, bins, gids,
-                                          num_steps=steps)
-
-            with warnings.catch_warnings():
-                # CPU ignores buffer donation and warns at lowering time;
-                # donation is for the accelerator path.
-                warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
-                compiled = (
-                    jax.jit(serve_fn, donate_argnums=(1,))
-                    .lower(self.registry.tables,
-                           jax.ShapeDtypeStruct((bucket, k_cap), jnp.int32),
-                           jax.ShapeDtypeStruct((bucket,), jnp.int32))
-                    .compile())
+            compiled = serve_lowering(self.registry, bucket).compile()
             self._exec[key] = compiled
             self.compile_count += 1
         return compiled
@@ -175,7 +184,8 @@ class ForestServer:
         """Queue one request (``bins`` [n, k_model]); flushes immediately
         once ``max_batch`` rows are pending.  ``now`` injects a timestamp
         for deterministic tests (defaults to ``time.monotonic()``)."""
-        if not 0 <= model_id < len(self.registry.tenants):
+        if (not 0 <= model_id < len(self.registry.tenants)
+                or self.registry.tenants[model_id] is None):
             raise ValueError(f"unknown model_id {model_id}")
         rows = self.registry.pad_bins(bins)
         pending = PendingRequest(self, rows.shape[0])

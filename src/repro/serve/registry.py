@@ -135,8 +135,8 @@ class ModelRegistry:
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
-        self.tenants: list[Tenant] = []
-        self._packed: list[PackedForest] = []
+        self.tenants: list[Tenant | None] = []
+        self._packed: list[PackedForest | None] = []
         self._tree_cap = tree_cap
         self._node_cap = node_cap
         self._k_cap = k_cap
@@ -152,6 +152,9 @@ class ModelRegistry:
         An array write when the model fits the current envelope (no shape
         change, no recompile); otherwise the envelope grows to fit and the
         host buffers are rebuilt (one recompile per bucket on next use).
+        A slot freed by ``remove`` is reused first (lowest id), so an
+        evict/add churn cycle inside the envelope never grows the model
+        axis.
 
         ``link_id = 2`` (softmax, core.losses serving ABI) is REJECTED:
         the routed walk produces one scalar per request, so a [B, C]
@@ -165,7 +168,8 @@ class ModelRegistry:
                 "the routed walk emits one scalar per request, not [B, C] "
                 "class scores; serve each class-tree set as a scalar "
                 "tenant or keep multiclass models on predict_device")
-        mid = len(self.tenants)
+        free = [i for i, t in enumerate(self.tenants) if t is None]
+        mid = free[0] if free else len(self.tenants)
         grew = mid >= self.capacity
         while mid >= self.capacity:
             self.capacity *= 2
@@ -183,11 +187,16 @@ class ModelRegistry:
                 grew |= (np.promote_types(self._np[f].dtype,
                                           getattr(packed, f).dtype)
                          != self._np[f].dtype)
-        self.tenants.append(Tenant(
+        tenant = Tenant(
             name=name, model_id=mid, n_trees=packed.n_trees,
             max_nodes=packed.max_nodes, k=k, num_steps=steps,
-            meta=dict(packed.meta)))
-        self._packed.append(packed)
+            meta=dict(packed.meta))
+        if mid < len(self.tenants):
+            self.tenants[mid] = tenant
+            self._packed[mid] = packed
+        else:
+            self.tenants.append(tenant)
+            self._packed.append(packed)
         if self._np is None or grew:
             self._rebuild()
         else:
@@ -198,8 +207,9 @@ class ModelRegistry:
     def _alloc(self):
         g, t, n, k = (self.capacity, self._tree_cap, self._node_cap,
                       self._k_cap)
+        live = [p for p in self._packed if p is not None]
         dt = {f: functools.reduce(
-            np.promote_types, [getattr(p, f).dtype for p in self._packed])
+            np.promote_types, [getattr(p, f).dtype for p in live])
             for f in ("feat", "tbin", "loff")}
         buf = {f: np.full((g, t, n), _FILLS[f], dtype=dt[f])
                for f in ("feat", "tbin", "loff")}
@@ -221,10 +231,48 @@ class ModelRegistry:
         self._np["base"][mid] = p.meta["base"]
         self._np["link"][mid] = p.meta["link_id"]
 
+    def _clear_slot(self, mid: int):
+        """Reset one model slot to the inert fill values (node 0 becomes a
+        label-0 leaf in every tree lane — it contributes exactly 0 if a
+        stale model id ever routes here)."""
+        for f in ("feat", "op", "tbin", "loff"):
+            self._np[f][mid, :, :] = _FILLS[f]
+        self._np["label"][mid, :, :] = _FILLS["label"]
+        self._np["n_num"][mid, :] = 0
+        self._np["lr"][mid] = 0.0
+        self._np["base"][mid] = 0.0
+        self._np["link"][mid] = 0
+
     def _rebuild(self):
         self._np = self._alloc()
-        for mid in range(len(self._packed)):
-            self._write_slot(mid)
+        for mid, p in enumerate(self._packed):
+            if p is not None:
+                self._write_slot(mid)
+
+    # -- eviction ----------------------------------------------------------
+
+    def remove(self, name: str) -> int:
+        """Evict the tenant named ``name``; returns the freed model id.
+
+        The slot is cleared to the inert fill values and marked free for
+        the next ``add``.  The envelope NEVER shrinks on eviction — the
+        caps, ``num_steps`` and every buffer dtype stay exactly as they
+        were — so ``shape_sig`` is unchanged and every compiled serve
+        executable stays valid: evicting (and re-adding within the
+        envelope) costs zero recompiles, asserted by the serve tests.
+        Requests still routing to the freed id raise in ``submit``
+        (unknown model) rather than silently scoring against a cleared
+        slot."""
+        for mid, t in enumerate(self.tenants):
+            if t is not None and t.name == name:
+                break
+        else:
+            raise KeyError(f"no tenant named {name!r}")
+        self.tenants[mid] = None
+        self._packed[mid] = None
+        self._clear_slot(mid)
+        self._tables = None
+        return mid
 
     # -- serving surface ---------------------------------------------------
 

@@ -4,7 +4,6 @@ bf16-compressed gradient all-reduce option (distributed-optimization trick:
 halves the data-parallel gradient collective bytes; enabled per-config)."""
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -1,7 +1,6 @@
 """Hybrid-feature binning + the paper's Table 3 comparison semantics."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core import fit_bins, transform, evaluate_predicate, OP_LE, OP_GT, OP_EQ
 from repro.data import make_hybrid_table

@@ -1,7 +1,6 @@
 """Fault tolerance: checkpoint/restore equivalence for both the LM train
 state and the level-synchronous tree build."""
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.checkpoint import (TreeCheckpointer, latest_step,

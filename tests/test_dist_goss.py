@@ -101,24 +101,24 @@ n_sel = int((w_ref_np > 0).sum())
 assert n_sel <= q_top * D_SHARDS + q_oth * D_SHARDS, n_sel
 
 
-def prim_names(jaxpr, out):
-    for eqn in jaxpr.eqns:
-        out.append(eqn.primitive.name)
-        for v in eqn.params.values():
-            for s in (v if isinstance(v, (list, tuple)) else [v]):
-                if type(s).__name__ == "ClosedJaxpr":
-                    prim_names(s.jaxpr, out)
-                elif hasattr(s, "eqns"):
-                    prim_names(s, out)
-    return out
+# the shared repro.check walker + rule replace the old hand-rolled walker
+# and its narrow banned set {all_to_all, ppermute, all_gather}: the
+# canonical BANNED_GATHER_PRIMS also covers the newer gather/permute
+# spellings (pgather, all_gather_invariant, ragged_all_to_all), and the
+# CollectiveBudget rule additionally pins the collective COUNT: exactly
+# one scalar pmax per data axis, nothing else.
+from repro.check import (BANNED_GATHER_PRIMS, CollectiveBudget, Surface,
+                         prim_names)
 
-
-names = prim_names(
-    jax.make_jaxpr(lambda a, b, c: sampler(a, b, c))(y_d, raw_d, sub).jaxpr,
-    [])
-banned = {"all_to_all", "ppermute", "all_gather"}
-assert not banned & set(names), sorted(banned & set(names))
+sampler_jaxpr = jax.make_jaxpr(lambda a, b, c: sampler(a, b, c))(
+    y_d, raw_d, sub)
+names = prim_names(sampler_jaxpr.jaxpr)
+assert not BANNED_GATHER_PRIMS & set(names), \
+    sorted(BANNED_GATHER_PRIMS & set(names))
 assert "pmax" in names          # the scalar threshold merge IS the collective
+viol = CollectiveBudget(allowed={"pmax": dict(max=1, scalar=True)}).check(
+    Surface(jaxpr=sampler_jaxpr, label="sampler"))
+assert not viol, [str(v) for v in viol]
 
 # ---- fit parity vs a single-device loop fed the SAME sampling decisions:
 # selected rows are gathered on host from the reference sampler, each tree

@@ -19,6 +19,7 @@ from repro.core import (GossConfig, GradientBoostedTrees, TreeConfig,
                         build_tree, class_stats, fit_bins, moment_stats,
                         node_histogram, node_histogram_sibling_fused,
                         node_histogram_smaller_child, predict_bins, transform)
+from repro.check import prim_names
 from repro.core.forest import _goss_sample
 from repro.core.histogram import _BACKENDS
 from repro.data import make_regression, train_val_test_split
@@ -65,21 +66,6 @@ def test_uniform_weights_bit_identical(backend):
     np.testing.assert_array_equal(np.asarray(hu), np.asarray(h1))
 
 
-def _prim_names(jaxpr):
-    """Flat primitive-name sequence, recursing through pjit/closed calls."""
-    names = []
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pjit":
-            names.extend(_prim_names(eqn.params["jaxpr"].jaxpr))
-            continue
-        names.append(eqn.primitive.name)
-        for v in eqn.params.values():
-            for sub in (v if isinstance(v, (list, tuple)) else [v]):
-                if type(sub).__name__ == "ClosedJaxpr":
-                    names.extend(_prim_names(sub.jaxpr))
-    return names
-
-
 @pytest.mark.parametrize("backend", ["segment", "onehot"])
 def test_unweighted_jaxpr_is_the_pre_weighting_trace(backend):
     """``weights=None`` must add NO ops: the public entry point's trace is
@@ -92,12 +78,12 @@ def test_unweighted_jaxpr_is_the_pre_weighting_trace(backend):
         bb, ss, sl, num_slots=s, n_bins=b, backend=backend))(bins, stats, slot)
     j_raw = jax.make_jaxpr(lambda bb, ss, sl: _BACKENDS[backend](
         bb, ss, sl, s, b))(bins, stats, slot)
-    assert _prim_names(j_pub.jaxpr) == _prim_names(j_raw.jaxpr)
+    assert prim_names(j_pub.jaxpr) == prim_names(j_raw.jaxpr)
     # and the weighted trace differs (the weight multiply exists at all)
     j_w = jax.make_jaxpr(lambda bb, ss, sl, ww: node_histogram(
         bb, ss, sl, num_slots=s, n_bins=b, backend=backend,
         weights=ww))(bins, stats, slot, w)
-    assert _prim_names(j_w.jaxpr) != _prim_names(j_pub.jaxpr)
+    assert prim_names(j_w.jaxpr) != prim_names(j_pub.jaxpr)
 
 
 @pytest.mark.parametrize("kind", ["class", "moment"])

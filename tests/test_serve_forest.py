@@ -186,6 +186,47 @@ def test_routed_parity_single_and_mixed_tenants():
     np.testing.assert_array_equal(want, got)
 
 
+def test_registry_eviction_reuses_slot_zero_recompiles():
+    """remove() frees the slot without shrinking the envelope: shape_sig
+    is unchanged, the compiled executables keep serving (zero recompiles
+    across an evict -> re-add churn cycle), the freed id is rejected by
+    submit, the lowest free slot is reused, and surviving tenants stay
+    bit-exact throughout."""
+    a, bins_a = _fit("squared", n_trees=4, max_depth=4, seed=0)
+    b, bins_b = _fit("logistic", n_trees=3, max_depth=3, seed=1)
+    c, bins_c = _fit("squared", n_trees=2, max_depth=3, seed=2)
+    registry = ModelRegistry(capacity=4)
+    mid_a = registry.add("a", a)
+    mid_b = registry.add("b", b)
+    server = ForestServer(registry, BatchPolicy(buckets=(8,)))
+    want_a = np.asarray(a.predict_device(bins_a)[:5])
+    want_b = np.asarray(b.predict_proba_device(bins_b)[:5])
+    np.testing.assert_array_equal(want_a, server.predict(mid_a, bins_a[:5]))
+    sig = registry.shape_sig
+    compiles = server.compile_count
+
+    with pytest.raises(KeyError, match="nobody"):
+        registry.remove("nobody")
+    assert registry.remove("a") == mid_a
+    # envelope never shrinks: same sig -> the executable stays valid
+    assert registry.shape_sig == sig
+    with pytest.raises(ValueError, match="unknown model_id"):
+        server.submit(mid_a, bins_a[:1])
+    # survivor still bit-exact on the cleared tables, no new compile
+    np.testing.assert_array_equal(want_b, server.predict(mid_b, bins_b[:5]))
+    assert server.compile_count == compiles
+
+    # re-add reuses the lowest freed slot; still zero recompiles
+    mid_c = registry.add("c", c)
+    assert mid_c == mid_a
+    assert registry.shape_sig == sig
+    np.testing.assert_array_equal(
+        np.asarray(c.predict_device(bins_c)[:5]),
+        server.predict(mid_c, bins_c[:5]))
+    np.testing.assert_array_equal(want_b, server.predict(mid_b, bins_b[:5]))
+    assert server.compile_count == compiles
+
+
 def test_registry_byte_accounting():
     gbt, _ = _fit(n_trees=4)
     registry = ModelRegistry(capacity=2)

@@ -3,7 +3,6 @@ Algorithm 4, and vs the generic O(M*N) selection — on exact (unbinned-lossless
 features, all three must agree on the best heuristic score."""
 import math
 
-import numpy as np
 import jax.numpy as jnp
 import pytest
 pytest.importorskip("hypothesis")  # CI installs it; degrade to skips locally
@@ -11,7 +10,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import fit_bins, best_splits, node_histogram, class_stats
 from repro.core.generic import generic_best_split_on_feature
-from repro.core.split import NEG_INF
 
 
 # ---------------------------------------------------------------------------

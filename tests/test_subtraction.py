@@ -191,30 +191,16 @@ def test_fused_epilogue_empty_and_skewed_siblings(kind):
                                       np.asarray(want)[..., 0])
 
 
-def _iter_eqns(jaxpr):
-    """All equations of a jaxpr, recursing into sub-jaxprs EXCEPT the
-    pallas_call kernel body (in-kernel ops are the point of the fusion)."""
-    for eqn in jaxpr.eqns:
-        yield eqn
-        if eqn.primitive.name == "pallas_call":
-            continue
-        stack = list(eqn.params.values())
-        while stack:
-            v = stack.pop()
-            if isinstance(v, (list, tuple)):
-                stack.extend(v)
-            elif type(v).__name__ == "ClosedJaxpr":
-                yield from _iter_eqns(v.jaxpr)
-            elif type(v).__name__ == "Jaxpr":
-                yield from _iter_eqns(v)
-
-
 def test_fused_epilogue_level_step_jaxpr_has_no_jnp_derivation():
     """Acceptance gate: with the pallas backend the level step's jaxpr
     contains the histogram pallas_call but NO jnp subtraction over the
     packed [S/2, K, B, C] pair axis — the sibling derivation happens only
-    inside the kernel epilogue."""
+    inside the kernel epilogue.  Walks the trace with the shared
+    repro.check walker, pallas body excluded (in-kernel ops are the point
+    of the fusion)."""
     import jax
+
+    from repro.check import iter_eqns
     from repro.core.tree import _chunk_step, _init_arrays
 
     m, k, b, c, s, max_nodes = 64, 3, 8, 2, 8, 64
@@ -236,7 +222,7 @@ def test_fused_epilogue_level_step_jaxpr_has_no_jnp_derivation():
               hist_backend="pallas", select_backend="jnp", n_label_bins=1,
               use_sub=True, want_hist=True)
     jaxpr = jax.make_jaxpr(lambda *a: _chunk_step(*a, **kw))(*args)
-    eqns = list(_iter_eqns(jaxpr.jaxpr))
+    eqns = list(iter_eqns(jaxpr.jaxpr, enter_pallas=False))
     assert any(e.primitive.name == "pallas_call" for e in eqns)
     packed = {(s // 2, k, b, c)}
     bad = [e for e in eqns if e.primitive.name == "sub"

@@ -1,9 +1,8 @@
 """End-to-end UDT behaviour: purity, determinism, shape/NaN invariants."""
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
-from repro.core import (fit_bins, transform, build_tree, TreeConfig,
+from repro.core import (fit_bins, build_tree, TreeConfig,
                         predict_bins)
 from repro.data import make_classification, make_hybrid_table
 
