@@ -1,0 +1,123 @@
+"""Chaos benchmark + the blocking chaos gate.
+
+    PYTHONPATH=src python -m benchmarks.bench_chaos [--smoke | --gate]
+                                                    [--no-breaker]
+                                                    [--no-digest]
+
+Runs the deterministic chaos scenario (``repro.resilience.run_chaos``):
+a seeded fault plan — mid-ensemble preemption, mismatched-config resume,
+checkpoint corruption at rest, NaN labels, a poisoned tenant table,
+clock skew past deadlines, transient executor faults, a queue-bound
+burst — against real fits, real round checkpoints and a real
+``ForestServer``.  Every fault must end ``recovered_exact``
+(bit-identical to the un-faulted execution) or ``degraded_graceful``
+(a typed, explicit error) — never a hang, never a silently wrong
+answer.
+
+``--gate`` is the blocking CI mode: nonzero when ANY fault is
+unhandled, when resume parity is not exactly 0.0, when nothing was shed
+or served under deadline pressure, or when the fault census drifts from
+the committed BENCH_chaos.json.  ``--no-breaker`` / ``--no-digest``
+disable the two guards this PR adds; either flag must flip the gate
+nonzero (the harness detects the silently-served NaNs / the
+frankenstein resume as unhandled) — tested in tests/test_resilience.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.resilience import run_chaos
+
+# the one definition of the CI gate scenario (seed fixes the FaultPlan)
+SMOKE = dict(seed=0)
+
+
+def run(seed=0, out="BENCH_chaos.json", *, breaker_enabled=True,
+        digest_check=True):
+    t0 = time.perf_counter()
+    rep = run_chaos(seed=seed, breaker_enabled=breaker_enabled,
+                    digest_check=digest_check)
+    rep["wall_s"] = round(time.perf_counter() - t0, 3)
+    with open(out, "w") as f:
+        json.dump(rep, f, indent=2)
+
+    print("chaos,fault,outcome")
+    for o in rep["outcomes"]:
+        print(f"chaos,{o['fault']},{o['outcome']}")
+    print(f"chaos,resume_parity_max_abs,{rep['resume_parity_max_abs']}")
+    print(f"chaos,shed_vs_served,{rep['shed']}/{rep['served']}")
+    print(f"chaos_total,{rep['faults_injected']} faults injected, "
+          f"{rep['recovered_exact']} recovered exact, "
+          f"{rep['degraded_graceful']} degraded graceful, "
+          f"{rep['unhandled']} unhandled, {rep['wall_s']}s -> {out}")
+    return rep
+
+
+def gate(baseline_path="BENCH_chaos.json", *, breaker_enabled=True,
+         digest_check=True):
+    """Blocking CI gate over the chaos scenario.
+
+    Blocks when any fault is unhandled, when resume parity deviates from
+    exactly 0.0, when deadline pressure shed nothing or served nothing,
+    when a fault escaped classification entirely, or when the fault
+    census (injected / recovered / graceful) drifts from the committed
+    baseline.  Writes its own report to a throwaway path so a regressed
+    run can never ratchet the committed baseline."""
+    baseline = None
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    rep = run(**SMOKE, out=os.path.join(
+        tempfile.gettempdir(), "BENCH_chaos_gate.json"),
+        breaker_enabled=breaker_enabled, digest_check=digest_check)
+
+    checks = [
+        ("unhandled faults", rep["unhandled"] == 0,
+         f"{rep['unhandled']} (require 0)"),
+        ("fault census closed",
+         rep["recovered_exact"] + rep["degraded_graceful"]
+         + rep["unhandled"] == rep["faults_injected"],
+         f"{rep['recovered_exact']}+{rep['degraded_graceful']}"
+         f"+{rep['unhandled']} == {rep['faults_injected']}"),
+        ("resume parity", rep["resume_parity_max_abs"] == 0.0,
+         f"max |dev| {rep['resume_parity_max_abs']} (require 0.0)"),
+        ("deadline shedding", rep["shed"] > 0,
+         f"{rep['shed']} requests shed (require > 0)"),
+        ("degraded serving", rep["served"] > 0,
+         f"{rep['served']} rows served under chaos (require > 0)"),
+        ("retry absorption", rep["retries"] > 0,
+         f"{rep['retries']} retries (require > 0)"),
+    ]
+    if baseline is None:
+        print(f"chaos-gate: no baseline at {baseline_path} "
+              "(floor checks only)")
+    else:
+        for key in ("faults_injected", "recovered_exact",
+                    "degraded_graceful"):
+            checks.append((
+                f"baseline census: {key}", rep[key] == baseline[key],
+                f"{rep[key]} (committed {baseline[key]})"))
+    ok = True
+    for name, passed, detail in checks:
+        ok = ok and passed
+        print(f"chaos-gate: {name}: {detail} -> "
+              f"{'OK' if passed else 'FAIL'}")
+    return 0 if ok else 1
+
+
+def main():
+    kw = dict(breaker_enabled="--no-breaker" not in sys.argv,
+              digest_check="--no-digest" not in sys.argv)
+    if "--gate" in sys.argv:
+        sys.exit(gate(**kw))
+    return run(**SMOKE, **kw)
+
+
+if __name__ == "__main__":
+    main()

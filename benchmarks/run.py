@@ -23,9 +23,10 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import bench_selection, bench_udt_cls, bench_udt_reg
-from benchmarks import (bench_check, bench_dist_goss, bench_goss,
-                        bench_kdd99, bench_kernels, bench_logistic,
-                        bench_serve_forest, bench_subtraction, bench_toot)
+from benchmarks import (bench_chaos, bench_check, bench_dist_goss,
+                        bench_goss, bench_kdd99, bench_kernels,
+                        bench_logistic, bench_serve_forest,
+                        bench_subtraction, bench_toot)
 
 # every blocking gate, in dependency-light-first order; each entry is
 # (name, module) where module.gate() returns 0 (pass) / 1 (fail)
@@ -38,6 +39,7 @@ GATES = (
     ("serve_forest", bench_serve_forest),
     ("kdd99", bench_kdd99),
     ("toot", bench_toot),
+    ("chaos", bench_chaos),
 )
 
 
@@ -156,6 +158,10 @@ def main() -> None:
         bench_toot.run()
     else:   # reduced-scale default
         bench_toot.run(m=8_000, k=8, ens_trees=8)
+
+    print("# chaos harness: fault injection + resume parity "
+          "(writes BENCH_chaos.json)")
+    bench_chaos.run(**bench_chaos.SMOKE)    # one scenario at every scale
 
     print("# multi-tenant forest serving (writes BENCH_serve.json)")
     if smoke:

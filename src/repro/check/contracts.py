@@ -383,6 +383,43 @@ def _build_routed_walk() -> Surface:
     return Surface(jaxpr=jaxpr, label="serve/routed-walk")
 
 
+@contract("serve/degraded-walk",
+          surface="serve.registry.routed_forest_walk[ok-lane]",
+          rules=_LOCAL_RULES)
+def _build_degraded_walk() -> Surface:
+    """The DEGRADED serve path: the routed walk traced with a poisoned
+    tenant slot resident and the finiteness lane (``ok``) consumed by the
+    caller — exactly what the circuit-breaker path executes.  Graceful
+    degradation must be free on device: the ok lane is one elementwise
+    ``isfinite`` on the pre-link raw scores, so the degraded trace gets
+    the SAME budget as the healthy one — zero collectives, zero host
+    transfers, static shapes (quarantine decisions happen host-side on
+    the [B] bool lane, never by re-walking or gathering on device)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve.registry import routed_forest_walk
+    reg = _smoke_registry()
+    # poison tenant-b's label table in place — the fault the breaker
+    # exists for; the registry's device cache is dropped so the trace
+    # sees the poisoned buffers
+    reg._np["label"][1, :, :] = np.nan
+    reg._tables = None
+    rng = np.random.default_rng(8)
+    b = 8
+
+    def degraded(tb, bins, gids):
+        out, ok = routed_forest_walk(tb, bins, gids,
+                                     num_steps=reg.num_steps)
+        # the caller-side consumption: masked outputs + the shed lane
+        return jnp.where(ok, out, jnp.float32(0.0)), ok
+
+    jaxpr = jax.make_jaxpr(degraded)(
+        reg.tables,
+        jnp.asarray(rng.integers(0, 8, size=(b, 4)), jnp.int32),
+        jnp.asarray(rng.integers(0, 2, size=b), jnp.int32))
+    return Surface(jaxpr=jaxpr, label="serve/degraded-walk")
+
+
 @contract("serve/batched-exec", surface="serve.batching.serve_lowering",
           rules=(DonationCheck(min_donated=1), CollectiveBudget(),
                  NoHostTransfer()))

@@ -5,3 +5,7 @@ from repro.checkpoint.checkpoint import (  # noqa: F401
 from repro.checkpoint.tree_ckpt import (  # noqa: F401
     TreeCheckpointer, restore_build_state,
 )
+from repro.checkpoint.round_ckpt import (  # noqa: F401
+    CheckpointCorruptError, CheckpointMismatchError, RoundCheckpoint,
+    RoundCheckpointer, RoundState, fit_digest, restore_round_state,
+)

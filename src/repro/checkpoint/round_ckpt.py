@@ -1,0 +1,283 @@
+"""Round-granular boosting checkpoints: preemption-safe ``fit`` resume.
+
+``TreeCheckpointer`` (tree_ckpt.py) snapshots ONE tree's per-level build
+state; this module snapshots the whole ensemble fit at **round
+boundaries**, which is the granularity at which resume can be *exact*:
+the boosting loop's only cross-round state is (trees so far, the additive
+raw scores, the PRNG key carry), and the sequential ``key, sub =
+jax.random.split(key)`` discipline in ``GradientBoostedTrees`` means the
+first r trees of an uninterrupted fit are bit-identical to an r-round
+fit — so restoring that triple and re-entering the loop at round r
+produces the SAME remaining trees, bit for bit (tested by SIGKILL
+subprocess tests on both the local and the mesh path).
+
+What a round checkpoint contains:
+
+  * the stacked tree arrays of every completed round (``[T, max_nodes]``
+    per Tree field — shapes are static across rounds, so one ``np.stack``
+    round-trips exactly),
+  * the full-data raw scores (``[M]``, ``[C, M]`` multiclass, or the
+    ``[m_pad]`` / ``[C, m_pad]`` sharded layout — f32 either way, and an
+    f32 host round-trip is value-exact),
+  * the PRNG key carry (the GOSS draw sequence continues, not restarts),
+  * a **config digest** (``fit_digest``): sha256 over everything the
+    remaining rounds' bit-pattern depends on — loss, learning rate, tree
+    config, GOSS config, seed, the binned table bytes, labels, sample
+    weights, and the execution path (local vs mesh layout).  ``fit(...,
+    resume_from=...)`` refuses a digest mismatch loudly
+    (:class:`CheckpointMismatchError`): resuming a fit under a different
+    config would SILENTLY produce an ensemble no uninterrupted fit could
+    ever produce, which is strictly worse than retraining.
+
+Corruption posture: writes go through ``checkpoint.save_pytree`` (atomic
+tmp + rename), and every array's sha256 is stored in the manifest and
+re-verified on restore — ``np.savez`` members are STORED, not deflated,
+so a flipped byte in the shard would otherwise read back silently.  A
+truncated / bit-flipped / unparseable checkpoint raises
+:class:`CheckpointCorruptError`; the chaos harness then resumes from the
+previous intact round (``RoundCheckpointer(keep_last=...)`` controls how
+many survive).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import zipfile
+import zlib
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from repro.checkpoint.checkpoint import latest_step, save_pytree
+from repro.core.tree import Tree
+
+__all__ = ["RoundState", "RoundCheckpoint", "RoundCheckpointer",
+           "restore_round_state", "resolve_resume", "fit_digest",
+           "CheckpointCorruptError", "CheckpointMismatchError"]
+
+# the Tree fields that are [max_nodes] arrays (everything but the scalar)
+_TREE_ARRAY_FIELDS = tuple(f for f in Tree._fields if f != "n_nodes")
+
+_FORMAT = 1
+
+
+class CheckpointCorruptError(RuntimeError):
+    """The checkpoint on disk is unreadable or fails its checksums —
+    truncated write, flipped bits, or a garbled manifest.  Callers should
+    fall back to an earlier step (or a fresh fit), never trust the data."""
+
+
+class CheckpointMismatchError(ValueError):
+    """The checkpoint's config digest does not match the resuming fit.
+    Resuming under a different loss / config / data would silently
+    produce trees no uninterrupted fit could produce; refuse loudly."""
+
+
+class RoundState(NamedTuple):
+    """What ``GradientBoostedTrees.fit`` hands its ``round_callback`` after
+    each completed round: everything the next round's bit-pattern depends
+    on.  ``round`` counts COMPLETED rounds (1-based); ``raw`` and ``key``
+    are live device arrays (the checkpointer materialises them)."""
+    round: int
+    trees: list
+    raw: Any
+    key: Any
+    digest: str | None
+
+
+class RoundCheckpoint(NamedTuple):
+    """A restored round checkpoint (host arrays), accepted by
+    ``fit(resume_from=...)``.  ``digest=None`` skips the config check —
+    an explicit escape hatch (the chaos gate uses it to PROVE the check
+    matters); never the default."""
+    round: int
+    trees: list
+    raw: np.ndarray
+    key: np.ndarray
+    digest: str | None
+
+
+def _sha256(arr: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(str(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+class RoundCheckpointer:
+    """``round_callback`` that persists fit state every ``every`` rounds.
+
+    ``keep_last`` > 0 prunes older step directories after each successful
+    write (the newest ``keep_last`` survive — keep >= 2 so a checkpoint
+    corrupted at rest still leaves an intact predecessor); 0 keeps all.
+    Writes are atomic, so a kill MID-WRITE loses at most the round being
+    written, never the previous checkpoint.
+    """
+
+    def __init__(self, directory: str, *, every: int = 1,
+                 keep_last: int = 0):
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.directory = str(directory)
+        self.every = every
+        self.keep_last = keep_last
+
+    def __call__(self, state: RoundState) -> None:
+        if state.round % self.every:
+            return
+        stacked = {f: np.stack([np.asarray(getattr(t, f))
+                                for t in state.trees])
+                   for f in _TREE_ARRAY_FIELDS}
+        payload = {"trees": stacked,
+                   "raw": np.asarray(state.raw),
+                   "key": np.asarray(state.key)}
+        checksums = {"trees/" + f: _sha256(v) for f, v in stacked.items()}
+        checksums["raw"] = _sha256(payload["raw"])
+        checksums["key"] = _sha256(payload["key"])
+        save_pytree(payload, self.directory, state.round, extra={
+            "format": _FORMAT,
+            "round": state.round,
+            "digest": state.digest,
+            "n_nodes": [int(t.n_nodes) for t in state.trees],
+            "checksums": checksums,
+        })
+        if self.keep_last:
+            self._prune()
+
+    def _prune(self) -> None:
+        steps = sorted(
+            int(fn.split("_")[1]) for fn in os.listdir(self.directory)
+            if fn.startswith("step_") and not fn.endswith(".tmp"))
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+
+def restore_round_state(directory: str,
+                        step: int | None = None) -> RoundCheckpoint:
+    """Load a round checkpoint (the latest step by default), verifying
+    every array against its manifest sha256.  Raises
+    :class:`CheckpointCorruptError` on any unreadable or checksum-failing
+    state, ``FileNotFoundError`` when no checkpoint exists at all."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no round checkpoints in {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest in {d}: {e}") from e
+    extra = manifest.get("extra", {})
+    if extra.get("format") != _FORMAT or "n_nodes" not in extra:
+        raise CheckpointCorruptError(
+            f"{d} is not a round checkpoint (format "
+            f"{extra.get('format')!r}) — wrong directory, or a manifest "
+            "damaged at rest")
+    data: dict[str, np.ndarray] = {}
+    try:
+        for fn in sorted(os.listdir(d)):
+            if fn.startswith("shard_") and fn.endswith(".npz"):
+                with np.load(os.path.join(d, fn)) as z:
+                    data.update({k: z[k] for k in z.files})
+    except (OSError, ValueError, KeyError, EOFError,
+            zipfile.BadZipFile, zlib.error) as e:
+        raise CheckpointCorruptError(
+            f"truncated or unreadable checkpoint shard in {d}: {e}") from e
+    checksums = extra.get("checksums", {})
+    for key, want in checksums.items():
+        if key not in data:
+            raise CheckpointCorruptError(
+                f"checkpoint {d} is missing array {key!r}")
+        got = _sha256(data[key])
+        if got != want:
+            raise CheckpointCorruptError(
+                f"checksum mismatch for {key!r} in {d}: the shard was "
+                "corrupted at rest (npz members are stored uncompressed; "
+                "flipped bits read back without the sha256 guard)")
+    n_nodes = extra["n_nodes"]
+    try:
+        trees = [
+            Tree(**{f: data["trees/" + f][i] for f in _TREE_ARRAY_FIELDS},
+                 n_nodes=int(n_nodes[i]))
+            for i in range(len(n_nodes))]
+        raw, key = data["raw"], data["key"]
+    except (KeyError, IndexError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {d} arrays do not match its manifest: {e}") from e
+    return RoundCheckpoint(round=int(extra["round"]), trees=trees,
+                           raw=raw, key=key, digest=extra.get("digest"))
+
+
+def resolve_resume(spec, expect_digest: str | None) -> RoundCheckpoint:
+    """Normalise ``fit(resume_from=...)``: a directory path is restored
+    (latest step), a ``RoundCheckpoint`` passes through.  Enforces the
+    config digest unless the checkpoint carries ``digest=None`` (the
+    explicit, caller-owned escape hatch)."""
+    ck = spec if isinstance(spec, RoundCheckpoint) else \
+        restore_round_state(str(spec))
+    if ck.digest is not None and expect_digest is not None \
+            and ck.digest != expect_digest:
+        raise CheckpointMismatchError(
+            "resume_from checkpoint was written by a DIFFERENT fit "
+            f"configuration (digest {ck.digest[:12]}… vs this fit's "
+            f"{expect_digest[:12]}…): loss/config/GOSS/seed/data must all "
+            "match for resume to be exact.  Refusing — resuming anyway "
+            "would silently produce an ensemble no uninterrupted fit "
+            "could produce.")
+    return ck
+
+
+def fit_digest(est, table, y, sample_weight=None, *, mesh=None,
+               dist=None) -> str:
+    """sha256 over everything the remaining rounds' bit-pattern depends
+    on.  Deterministic across processes (no reprs of live objects): loss
+    identity + params, estimator hyper-parameters, the full TreeConfig and
+    GossConfig field sets, the binned table bytes and feature masks, the
+    labels and sample weights, and the execution-path layout (local vs
+    mesh shape/axes — the sharded reduction order is part of the bit
+    pattern)."""
+    import dataclasses
+
+    h = hashlib.sha256()
+
+    def put(tag: str, v) -> None:
+        h.update(f"{tag}={v!r};".encode())
+
+    lo = getattr(est, "_loss", None)
+    if lo is None:
+        lo = est._resolve_loss(y)
+    put("loss", (lo.name, getattr(lo, "n_classes", None),
+                 int(lo.link_id), bool(lo.constant_hessian)))
+    put("n_trees", int(est.n_trees))
+    put("lr", float(est.learning_rate))
+    put("seed", int(est.seed))
+    put("config", sorted(dataclasses.asdict(est.config).items()))
+    put("goss", (None if est.goss is None
+                 else sorted(dataclasses.asdict(est.goss).items())))
+    if mesh is not None:
+        axes = (tuple(dist.data_axes), dist.model_axis) if dist is not None \
+            else None
+        put("path", ("mesh", tuple(sorted(mesh.shape.items())), axes))
+    else:
+        put("path", ("local",))
+    bins = np.asarray(table.bins)
+    put("bins_meta", (bins.shape, str(bins.dtype)))
+    h.update(np.ascontiguousarray(bins).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(table.n_num)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(table.n_cat)).tobytes())
+    y_arr = np.asarray(y)
+    put("y_meta", (y_arr.shape, str(y_arr.dtype)))
+    h.update(np.ascontiguousarray(y_arr).tobytes())
+    if sample_weight is not None:
+        sw = np.asarray(sample_weight, dtype=np.float32)
+        put("sw_meta", sw.shape)
+        h.update(np.ascontiguousarray(sw).tobytes())
+    else:
+        put("sw_meta", None)
+    return h.hexdigest()

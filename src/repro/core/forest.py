@@ -78,6 +78,52 @@ __all__ = ["RandomForest", "GradientBoostedTrees", "GossConfig",
            "goss_sample_sharded_ref"]
 
 
+def _validate_fit_inputs(table: BinnedTable, y, sample_weight=None) -> None:
+    """Reject non-finite training inputs LOUDLY at fit entry, naming the
+    offending column/row — silently training on a poisoned column yields
+    NaN leaf labels that only surface (if ever) at predict time.
+
+    ``table.bins`` is int32 after core.binning (raw-feature NaNs land in
+    the missing bin BY DESIGN, so integer bins are always valid); a float
+    bins array means the caller bypassed ``fit_bins``, and any non-finite
+    entry there is a corrupted pipeline, not a missing value.  Labels are
+    checked when float (regression / boosting targets); sample weights
+    must be finite and non-negative (they enter the histogram weight
+    channel, where a NaN poisons every statistic of its node)."""
+    bins = table.bins
+    if np.issubdtype(np.dtype(bins.dtype), np.floating):
+        b = np.asarray(bins)
+        bad = ~np.isfinite(b)
+        if bad.any():
+            col = int(np.argmax(bad.any(axis=0)))
+            meta = (table.metas[col] if table.metas is not None
+                    and col < len(table.metas) else None)
+            name = f" ({meta.name!r})" if meta is not None else ""
+            raise ValueError(
+                f"non-finite feature values in column {col}{name}: "
+                f"{int(bad[:, col].sum())} of {b.shape[0]} rows (first at "
+                f"row {int(np.argmax(bad[:, col]))}).  Binned features "
+                "must be finite — raw NaNs belong in the missing bin "
+                "(core.binning.fit_bins), a non-finite *bin* is a "
+                "corrupted pipeline.")
+    y_arr = np.asarray(y)
+    if np.issubdtype(y_arr.dtype, np.floating):
+        bad = ~np.isfinite(y_arr)
+        if bad.any():
+            raise ValueError(
+                f"non-finite labels: {int(bad.sum())} of {y_arr.shape[0]} "
+                f"rows (first at row {int(np.argmax(bad))}) — refusing to "
+                "train NaN trees")
+    if sample_weight is not None:
+        sw = np.asarray(sample_weight, dtype=np.float32)
+        bad = ~np.isfinite(sw) | (sw < 0)
+        if bad.any():
+            raise ValueError(
+                f"sample_weight must be finite and non-negative: "
+                f"{int(bad.sum())} of {sw.shape[0]} rows violate this "
+                f"(first at row {int(np.argmax(bad))})")
+
+
 def _subsample_table(table: BinnedTable, feat_mask: np.ndarray) -> BinnedTable:
     """Mask out features by zeroing their bin ranges (never selectable)."""
     return BinnedTable(
@@ -134,6 +180,7 @@ class RandomForest:
         # drop the stacked-walk cache FIRST: a refit that fails midway must
         # never leave predict serving the previous fit's trees
         self._stacked = None            # predict's lazy stacked-walk cache
+        _validate_fit_inputs(table, y, sample_weight)
         rng = np.random.default_rng(self.seed)
         m, k = table.bins.shape
         y = np.asarray(y)
@@ -490,7 +537,8 @@ class GradientBoostedTrees:
         return get_loss(self.loss)
 
     def fit(self, table: BinnedTable, y, *, sample_weight=None,
-            level_callback=None, mesh=None, dist=None):
+            level_callback=None, mesh=None, dist=None,
+            round_callback=None, resume_from=None):
         """Fit the ensemble (unified estimator signature: everything after
         ``y`` is keyword-only).  ``sample_weight`` ([M] f32) scales each
         example's gradient and hessian — it rides the weight channel, so
@@ -498,17 +546,38 @@ class GradientBoostedTrees:
         becomes its weighted estimate.  With ``mesh`` set the whole round
         loop runs sharded over ``dist.data_axes`` / ``dist.model_axis``
         (see ``_fit_sharded`` and core.distributed): same API, same trees
-        up to the documented weighted-moment tolerance."""
+        up to the documented weighted-moment tolerance.
+
+        Preemption safety (repro.checkpoint.round_ckpt): ``round_callback``
+        receives a ``RoundState`` after every completed round — pass a
+        ``RoundCheckpointer`` to persist it; ``resume_from`` (a checkpoint
+        directory or a restored ``RoundCheckpoint``) re-enters the loop at
+        the checkpointed round with the saved trees / raw scores / PRNG
+        carry.  The sequential ``jax.random.split`` discipline makes the
+        resumed fit BIT-IDENTICAL to an uninterrupted one, on the local
+        and the mesh path alike; a checkpoint whose config digest does not
+        match this fit raises ``CheckpointMismatchError``."""
         # drop the stacked-walk cache FIRST: a refit that fails midway must
         # never leave predict serving the previous fit's trees
         self._stacked = None                    # predict_device's lazy cache
+        _validate_fit_inputs(table, y, sample_weight)
         lo = self._loss = self._resolve_loss(y)
+        digest = None
+        if round_callback is not None or resume_from is not None:
+            from repro.checkpoint.round_ckpt import fit_digest
+            digest = fit_digest(self, table, y, sample_weight,
+                                mesh=mesh, dist=dist)
         if mesh is not None:
             return self._fit_sharded(table, y, mesh, dist, level_callback,
-                                     sample_weight)
+                                     sample_weight,
+                                     round_callback=round_callback,
+                                     resume_from=resume_from, digest=digest)
         if getattr(lo, "is_multiclass", False):
             return self._fit_multiclass(table, y, lo, sample_weight,
-                                        level_callback)
+                                        level_callback,
+                                        round_callback=round_callback,
+                                        resume_from=resume_from,
+                                        digest=digest)
         bins = jnp.asarray(table.bins)
         m = bins.shape[0]
         y = jnp.asarray(y, dtype=jnp.float32)
@@ -525,7 +594,8 @@ class GradientBoostedTrees:
             amp = self.goss.amplification
         self.trees: list[Tree] = []
         num_steps = max(1, self.config.max_depth)
-        for _ in range(self.n_trees):
+        start, raw, key = self._apply_resume(resume_from, digest, raw, key)
+        for r in range(start, self.n_trees):
             g, h = lo.grad_hess(y, raw)
             # a row weight scales g and h alike, so the Newton target is
             # weight-invariant; the weight enters through the h channel
@@ -556,11 +626,30 @@ class GradientBoostedTrees:
             # static depth bound so no per-tree host sync happens here
             raw = raw + self.learning_rate * predict_bins(
                 tree, bins, n_num_d, num_steps=num_steps)
+            if round_callback is not None:
+                round_callback(self._round_state(r + 1, raw, key, digest))
         self.base = float(base)                 # one scalar sync at the end
         return self
 
+    def _round_state(self, completed: int, raw, key, digest):
+        from repro.checkpoint.round_ckpt import RoundState
+        return RoundState(round=completed, trees=self.trees, raw=raw,
+                          key=key, digest=digest)
+
+    def _apply_resume(self, resume_from, digest, raw, key):
+        """Swap in a round checkpoint's (trees, raw, key) carry, after the
+        digest check.  Returns ``(start_round, raw, key)``; restored trees
+        stay host arrays (stack_trees / the serve pack re-device them)."""
+        if resume_from is None:
+            return 0, raw, key
+        from repro.checkpoint.round_ckpt import resolve_resume
+        ck = resolve_resume(resume_from, digest)
+        self.trees = list(ck.trees)
+        return ck.round, jnp.asarray(ck.raw), jnp.asarray(ck.key)
+
     def _fit_multiclass(self, table: BinnedTable, y, lo, sample_weight,
-                        level_callback):
+                        level_callback, *, round_callback=None,
+                        resume_from=None, digest=None):
         """The softmax round loop: raw scores are class-first [C, M], each
         round's per-class gradients/hessians come from ONE ``grad_hess``
         over the class axis, and the K class-trees are built by ONE
@@ -589,7 +678,8 @@ class GradientBoostedTrees:
         self.trees: list[Tree] = []
         num_steps = max(1, self.config.max_depth)
         lr = jnp.float32(self.learning_rate)
-        for _ in range(self.n_trees):
+        start, raw, key = self._apply_resume(resume_from, digest, raw, key)
+        for r in range(start, self.n_trees):
             g, h = lo.grad_hess(y_i, raw)       # [C, M] each
             z = lo.newton_target(g, h)
             if sw is not None:
@@ -619,11 +709,14 @@ class GradientBoostedTrees:
             raw = raw + lr * walk_class_trees(
                 {f: arrays[f] for f in WALK_FIELDS}, bins, n_num_d,
                 num_steps=num_steps)
+            if round_callback is not None:
+                round_callback(self._round_state(r + 1, raw, key, digest))
         self.base = np.asarray(base, dtype=np.float32)   # [C], one sync
         return self
 
     def _fit_sharded(self, table: BinnedTable, y, mesh, dist,
-                     level_callback, sample_weight=None):
+                     level_callback, sample_weight=None, *,
+                     round_callback=None, resume_from=None, digest=None):
         """The mesh-wide round loop: every per-round array — raw scores,
         gradients/hessians, the leverage ranking, the GOSS draw, the build
         weights and the score update — is a device Array sharded with
@@ -689,7 +782,20 @@ class GradientBoostedTrees:
         self.trees: list[Tree] = []
         use_w = (self.goss is not None or not lo.constant_hessian
                  or sw_d is not None)
-        for _ in range(self.n_trees):
+        start = 0
+        if resume_from is not None:
+            from repro.checkpoint.round_ckpt import resolve_resume
+            ck = resolve_resume(resume_from, digest)
+            self.trees = list(ck.trees)
+            start = ck.round
+            key = jnp.asarray(ck.key)
+            # re-stage the checkpointed raw scores into the sharded
+            # [m_pad] / [C, m_pad] layout (f32 host round-trips are exact)
+            stage = (builder._stage_class_rows if multiclass
+                     else builder._stage_rows)
+            raw = stage(np.asarray(ck.raw, dtype=np.float32), 0.0,
+                        np.float32)
+        for r in range(start, self.n_trees):
             key, sub = jax.random.split(key)
             args = (y_d, raw, sub) + ((sw_d,) if sw_d is not None else ())
             z, w, assign0 = sampler(*args)
@@ -707,6 +813,8 @@ class GradientBoostedTrees:
                 self.trees.append(tree)
                 raw = walk(raw, {f: getattr(tree, f) for f in WALK_FIELDS},
                            builder.bins_d, builder.n_num_d, lr)
+            if round_callback is not None:
+                round_callback(self._round_state(r + 1, raw, key, digest))
         self.base = base
         return self
 

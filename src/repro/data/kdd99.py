@@ -24,12 +24,13 @@ from __future__ import annotations
 import gzip
 import os
 import pathlib
+import time
 import urllib.request
 
 import numpy as np
 
 __all__ = ["SUPERCLASSES", "CAT_COLS", "N_FEATURES", "ATTACK_SUPERCLASS",
-           "load_kdd99", "synth_kdd99", "cache_dir"]
+           "DownloadError", "load_kdd99", "synth_kdd99", "cache_dir"]
 
 # the 5 superclasses, id order fixed (class ids = index into this tuple)
 SUPERCLASSES = ("normal", "dos", "probe", "r2l", "u2r")
@@ -116,18 +117,66 @@ def _load_cached(path: pathlib.Path):
         return z["num"], cats, z["y"]
 
 
-def _download(dest: pathlib.Path, timeout: float = 30.0) -> bytes | None:
-    for url in _URLS:
-        try:
-            with urllib.request.urlopen(url, timeout=timeout) as r:
-                gz = r.read()
-            raw = gzip.decompress(gz)
+class DownloadError(RuntimeError):
+    """Raised by ``load_kdd99(allow_download=True)`` when every download
+    attempt failed; carries the per-attempt failure list in ``errors``."""
+
+    def __init__(self, msg: str, errors: list):
+        super().__init__(msg)
+        self.errors = errors
+
+
+def _verify_payload(gz: bytes) -> bytes:
+    """Decompress and sanity-check a downloaded archive BEFORE it is
+    cached: a truncated body, an HTML error page, or a wrong file must
+    never poison the cache.  Returns the decompressed CSV bytes."""
+    raw = gzip.decompress(gz)        # raises BadGzipFile/EOFError on junk
+    head = raw[:4096].decode("ascii", errors="replace")
+    first = head.split("\n", 1)[0]
+    if first.count(",") != N_FEATURES:
+        raise ValueError(
+            f"payload is not the KDD99 CSV: expected {N_FEATURES + 1} "
+            f"comma-separated fields per line, first line has "
+            f"{first.count(',') + 1}")
+    return raw
+
+
+def _download(dest: pathlib.Path, timeout: float = 30.0, *,
+              attempts: int = 3, backoff_base: float = 0.5,
+              sleep=None) -> bytes | None:
+    """Fetch the 10% archive with bounded retry + exponential backoff.
+
+    Each round tries every mirror in ``_URLS``; between rounds it sleeps
+    ``backoff_base * 2**round`` seconds (``sleep`` injectable for tests).
+    Every payload is integrity-checked by :func:`_verify_payload` before
+    the ``.gz`` is written to the cache.  Returns the decompressed CSV on
+    success; on total failure returns ``None`` with the per-attempt
+    errors recorded on ``_download.last_errors`` (so the caller can
+    surface WHY when the user explicitly asked for a download)."""
+    do_sleep = sleep if sleep is not None else time.sleep
+    errors: list = []
+    _download.last_errors = errors
+    for attempt in range(attempts):
+        if attempt:
+            do_sleep(backoff_base * 2 ** (attempt - 1))
+        for url in _URLS:
+            try:
+                with urllib.request.urlopen(url, timeout=timeout) as r:
+                    gz = r.read()
+                raw = _verify_payload(gz)
+            except Exception as e:          # noqa: BLE001 — recorded, bounded
+                errors.append(f"attempt {attempt + 1} {url}: "
+                              f"{type(e).__name__}: {e}")
+                continue
             dest.parent.mkdir(parents=True, exist_ok=True)
-            dest.write_bytes(gz)
+            tmp = dest.with_suffix(dest.suffix + ".tmp")
+            tmp.write_bytes(gz)
+            os.replace(tmp, dest)
             return raw
-        except Exception:
-            continue
     return None
+
+
+_download.last_errors = []
 
 
 def synth_kdd99(m: int = 50000, seed: int = 0):
@@ -209,8 +258,15 @@ def load_kdd99(m: int | None = None, *, seed: int = 0,
     synthetic twin (``synth_kdd99(fallback_m, seed)``).  ``m`` subsamples
     (stratified-free uniform, deterministic under ``seed``) — the smoke
     benchmark's lever.  ``info`` carries ``source`` ("real"/"synthetic"),
-    ``m``, ``classes`` and the empirical ``priors``; never raises for
-    missing network, so offline CI always proceeds on the fallback."""
+    ``m``, ``classes`` and the empirical ``priors``.
+
+    Failure policy: downloads retry with exponential backoff and verify
+    payload integrity before caching (see :func:`_download`).  Only an
+    EXPLICIT ``allow_download=True`` turns total download failure into a
+    :class:`DownloadError` naming every attempt — the default (env-
+    resolved) path never raises for missing network, so offline CI
+    always proceeds on the synthetic fallback."""
+    explicit = allow_download is True
     if allow_download is None:
         allow_download = not os.environ.get("REPRO_KDD99_OFFLINE")
     cdir = cache_dir()
@@ -221,6 +277,13 @@ def load_kdd99(m: int | None = None, *, seed: int = 0,
     else:
         raw = gzip.decompress(gz.read_bytes()) if gz.exists() else (
             _download(gz) if allow_download else None)
+        if raw is None and explicit and not gz.exists():
+            detail = "; ".join(_download.last_errors) or "no attempts made"
+            raise DownloadError(
+                "KDD99 download failed after every attempt and "
+                "allow_download=True was passed explicitly — refusing to "
+                f"silently substitute synthetic data ({detail})",
+                list(_download.last_errors))
         if raw is not None:
             num, cats, y = _parse_raw(raw)
             cdir.mkdir(parents=True, exist_ok=True)

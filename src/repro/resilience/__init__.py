@@ -1,0 +1,32 @@
+"""Resilience: fault injection, chaos harness, degradation surface.
+
+Built on three pillars, each owned elsewhere and re-exported here as the
+single resilience-facing namespace:
+
+  * preemption-safe resume — ``repro.checkpoint`` round checkpoints
+    (``RoundCheckpointer`` / ``restore_round_state`` / ``fit_digest``)
+    consumed by ``GradientBoostedTrees.fit(resume_from=...)``;
+  * graceful serving degradation — ``repro.serve.degrade`` admission /
+    deadline / retry / circuit-breaker policies wired through
+    ``ForestServer``;
+  * deterministic chaos — :mod:`repro.resilience.inject` fault plans and
+    :func:`repro.resilience.harness.run_chaos`, the scenario the
+    blocking ``chaos-gate`` (benchmarks/bench_chaos.py) asserts on.
+
+See docs/resilience.md for the operational story.
+"""
+from repro.checkpoint.round_ckpt import (  # noqa: F401
+    CheckpointCorruptError, CheckpointMismatchError, RoundCheckpoint,
+    RoundCheckpointer, RoundState, fit_digest, restore_round_state,
+)
+from repro.serve.degrade import (  # noqa: F401
+    AdmissionPolicy, CircuitBreaker, DeadlineExceededError,
+    NonFiniteOutputError, QueueFullError, RetriesExhaustedError,
+    ServeError, TenantUnavailableError, TransientServeError,
+)
+from repro.resilience.inject import (  # noqa: F401
+    FaultPlan, PreemptedError, SkewClock, TransientFaults, chain,
+    corrupt_checkpoint, kill_at_round, make_plan, poison_labels,
+    poison_tenant, preempt_at_round,
+)
+from repro.resilience.harness import run_chaos  # noqa: F401

@@ -17,6 +17,11 @@ from repro.serve.pack import (  # noqa: F401
 from repro.serve.registry import (  # noqa: F401
     ModelRegistry, Tenant, routed_forest_walk,
 )
+from repro.serve.degrade import (  # noqa: F401
+    AdmissionPolicy, CircuitBreaker, DeadlineExceededError,
+    NonFiniteOutputError, QueueFullError, RetriesExhaustedError,
+    ServeError, TenantUnavailableError, TransientServeError,
+)
 from repro.serve.batching import (  # noqa: F401
     BatchPolicy, ForestServer, PendingRequest,
 )

@@ -33,6 +33,17 @@ into real outputs (tested).
 The server is single-threaded and cooperative (``submit`` / ``tick`` /
 ``flush``); timestamps can be injected for deterministic tests.  An async
 front-end is a transport concern layered on top, not part of this PR.
+
+Degradation (serve.degrade, exercised by the chaos gate): ``submit``
+rejects past the admission queue bound (``QueueFullError`` — explicit
+retryable backpressure, replacing the old unbounded queue) and serves
+503-style ``TenantUnavailableError`` for tenants whose circuit breaker is
+open; ``flush`` sheds requests that aged past their deadline
+(``DeadlineExceededError``, deterministic under injected ``now=``),
+retries transient executor failures with exponential backoff, and
+quarantines any request whose outputs fail the walk's on-device
+finiteness lane (``NonFiniteOutputError`` + a breaker failure for that
+tenant) — other tenants in the same batch are served normally.
 """
 from __future__ import annotations
 
@@ -44,6 +55,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.degrade import (AdmissionPolicy, CircuitBreaker,
+                                 DeadlineExceededError, NonFiniteOutputError,
+                                 QueueFullError, RetriesExhaustedError,
+                                 TenantUnavailableError, TransientServeError)
 from repro.serve.registry import ModelRegistry, routed_forest_walk
 
 __all__ = ["BatchPolicy", "ForestServer", "PendingRequest",
@@ -90,22 +105,40 @@ class BatchPolicy:
 
 
 class PendingRequest:
-    """Handle returned by ``submit``; ``result()`` forces a flush."""
+    """Handle returned by ``submit``; ``result()`` forces a flush.
 
-    def __init__(self, server: "ForestServer", n_rows: int):
+    A request resolves to exactly one of: an output array, or an explicit
+    ``ServeError`` (shed deadline, exhausted retries, non-finite outputs)
+    which ``result()`` re-raises — it never silently returns ``None`` or
+    a wrong answer, and after a flush it is always resolved (no hangs)."""
+
+    def __init__(self, server: "ForestServer", n_rows: int,
+                 model_id: int = 0, deadline: float | None = None):
         self._server = server
         self.n_rows = n_rows
+        self.model_id = model_id
+        self.deadline = deadline
         self._out: np.ndarray | None = None
+        self._err: Exception | None = None
 
     def done(self) -> bool:
-        return self._out is not None
+        return self._out is not None or self._err is not None
+
+    def exception(self) -> Exception | None:
+        """The resolving error, if the request failed (None otherwise)."""
+        return self._err
 
     def _set(self, out: np.ndarray):
         self._out = out
 
+    def _set_error(self, err: Exception):
+        self._err = err
+
     def result(self) -> np.ndarray:
-        if self._out is None:
+        if not self.done():
             self._server.flush()
+        if self._err is not None:
+            raise self._err
         return self._out
 
 
@@ -118,13 +151,31 @@ class ForestServer:
     the (bucket, model-set) compile contract made measurable."""
 
     def __init__(self, registry: ModelRegistry,
-                 policy: BatchPolicy | None = None):
+                 policy: BatchPolicy | None = None,
+                 admission: AdmissionPolicy | None = None,
+                 breaker: CircuitBreaker | None = None,
+                 fault_injector=None, sleep=None):
         self.registry = registry
         self.policy = policy or BatchPolicy()
+        self.admission = admission or AdmissionPolicy()
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        # fault_injector(site, attempt) is the chaos harness's hook into
+        # the executor path (raises TransientServeError to simulate a
+        # transient failure); sleep is injectable so backoff tests and the
+        # chaos gate never actually wait.
+        self.fault_injector = fault_injector
+        self._sleep = sleep if sleep is not None else time.sleep
         self._exec: dict = {}          # (bucket, shape_sig) -> compiled
         self.compile_count = 0
-        self.stats = dict(batches=0, rows=0, padded_rows=0, requests=0)
+        self.stats = dict(batches=0, rows=0, padded_rows=0, requests=0,
+                          rejected_full=0, rejected_open=0, shed=0,
+                          retries=0, nonfinite=0)
         self._queue: list = []         # (gids [n], rows [n,K], pending, t)
+
+    @property
+    def pending_rows(self) -> int:
+        """Rows currently queued (the admission-bound quantity)."""
+        return sum(q[0].shape[0] for q in self._queue)
 
     # -- bucket selection --------------------------------------------------
 
@@ -148,8 +199,10 @@ class ForestServer:
             self.compile_count += 1
         return compiled
 
-    def _execute(self, gids: np.ndarray, rows: np.ndarray) -> np.ndarray:
-        """Run one chunk: pad to its bucket, execute, slice the pad away."""
+    def _execute(self, gids: np.ndarray, rows: np.ndarray) -> tuple:
+        """Run one chunk: pad to its bucket, execute, slice the pad away.
+        Returns ``(out [n] f32, ok [n] bool)`` — the walk's finiteness
+        lane rides along with the predictions."""
         n = rows.shape[0]
         bucket = self.bucket_for(n)
         if n < bucket:
@@ -161,41 +214,87 @@ class ForestServer:
             # accelerator path, the warning is expected noise under CI.
             warnings.filterwarnings("ignore",
                                     message=".*[Dd]onat.*")
-            out = compiled(self.registry.tables,
-                           jnp.asarray(rows, dtype=jnp.int32),
-                           jnp.asarray(gids, dtype=jnp.int32))
+            out, ok = compiled(self.registry.tables,
+                               jnp.asarray(rows, dtype=jnp.int32),
+                               jnp.asarray(gids, dtype=jnp.int32))
         self.stats["batches"] += 1
         self.stats["rows"] += n
         self.stats["padded_rows"] += bucket - n
-        return np.asarray(out)[:n]
+        return np.asarray(out)[:n], np.asarray(ok)[:n]
 
-    def _run(self, gids: np.ndarray, rows: np.ndarray) -> np.ndarray:
+    def _run(self, gids: np.ndarray, rows: np.ndarray) -> tuple:
         """Chunk a (possibly oversize) row block through the buckets."""
         cap = self.policy.buckets[-1]
-        outs = []
+        outs, oks = [], []
         for i in range(0, rows.shape[0], cap):
-            outs.append(self._execute(gids[i:i + cap], rows[i:i + cap]))
-        return np.concatenate(outs) if outs else np.zeros((0,), np.float32)
+            o, k = self._execute(gids[i:i + cap], rows[i:i + cap])
+            outs.append(o)
+            oks.append(k)
+        if not outs:
+            return np.zeros((0,), np.float32), np.zeros((0,), bool)
+        return np.concatenate(outs), np.concatenate(oks)
+
+    def _run_with_retry(self, gids: np.ndarray, rows: np.ndarray) -> tuple:
+        """``_run`` under the admission policy's retry budget: transient
+        failures (injected ``TransientServeError`` or real RuntimeErrors
+        from the executor) back off ``backoff_base * 2**i`` and retry;
+        exhaustion raises ``RetriesExhaustedError`` with the last cause."""
+        last: BaseException | None = None
+        for attempt in range(self.admission.max_attempts):
+            if attempt:
+                self.stats["retries"] += 1
+                self._sleep(self.admission.backoff_base * 2 ** (attempt - 1))
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector("execute", attempt)
+                return self._run(gids, rows)
+            except (TransientServeError, RuntimeError) as e:
+                if isinstance(e, RetriesExhaustedError):
+                    raise
+                last = e
+        raise RetriesExhaustedError(self.admission.max_attempts, last)
 
     # -- queued serving ----------------------------------------------------
 
-    def submit(self, model_id: int, bins, now: float | None = None
-               ) -> PendingRequest:
+    def submit(self, model_id: int, bins, now: float | None = None,
+               deadline: float | None = None) -> PendingRequest:
         """Queue one request (``bins`` [n, k_model]); flushes immediately
         once ``max_batch`` rows are pending.  ``now`` injects a timestamp
-        for deterministic tests (defaults to ``time.monotonic()``)."""
+        for deterministic tests (defaults to ``time.monotonic()``);
+        ``deadline`` (seconds from now) overrides the admission policy's
+        default.  Raises ``TenantUnavailableError`` while the tenant's
+        circuit breaker is open, ``QueueFullError`` past the admission
+        bound — both explicit and retryable, never an unbounded queue."""
         if (not 0 <= model_id < len(self.registry.tenants)
                 or self.registry.tenants[model_id] is None):
             raise ValueError(f"unknown model_id {model_id}")
+        now_t = time.monotonic() if now is None else now
+        if not self.breaker.allow(model_id, now_t):
+            self.stats["rejected_open"] += 1
+            raise TenantUnavailableError(
+                model_id,
+                f"tenant {model_id} is quarantined (circuit "
+                f"{self.breaker.state(model_id)} after non-finite "
+                "outputs); retry after the breaker cooldown — other "
+                "tenants are unaffected")
         rows = self.registry.pad_bins(bins)
-        pending = PendingRequest(self, rows.shape[0])
-        gids = np.full((rows.shape[0],), model_id, dtype=np.int32)
-        self._queue.append(
-            (gids, rows, pending,
-             time.monotonic() if now is None else now))
+        n = rows.shape[0]
+        if self.pending_rows + n > self.admission.max_pending_rows:
+            self.stats["rejected_full"] += 1
+            raise QueueFullError(
+                f"admission queue full: {self.pending_rows} rows pending "
+                f"+ {n} requested > max_pending_rows="
+                f"{self.admission.max_pending_rows}; flush (or tick) and "
+                "resubmit")
+        dl = deadline if deadline is not None else self.admission.deadline
+        pending = PendingRequest(
+            self, n, model_id=model_id,
+            deadline=None if dl is None else now_t + dl)
+        gids = np.full((n,), model_id, dtype=np.int32)
+        self._queue.append((gids, rows, pending, now_t))
         self.stats["requests"] += 1
-        if sum(q[0].shape[0] for q in self._queue) >= self.policy.max_batch:
-            self.flush()
+        if self.pending_rows >= self.policy.max_batch:
+            self.flush(now=now_t)
         return pending
 
     def tick(self, now: float | None = None):
@@ -204,21 +303,63 @@ class ForestServer:
             return
         now = time.monotonic() if now is None else now
         if now - self._queue[0][3] >= self.policy.max_delay:
-            self.flush()
+            self.flush(now=now)
 
-    def flush(self):
-        """Drain the queue: one concatenated mixed-tenant batch, chunked
-        and padded to buckets, outputs sliced back per request."""
+    def flush(self, now: float | None = None):
+        """Drain the queue: shed requests past their deadline (explicit
+        ``DeadlineExceededError``, never a late answer), then run one
+        concatenated mixed-tenant batch — chunked and padded to buckets,
+        retried under the admission policy — and slice outputs back per
+        request.  Requests whose rows fail the walk's finiteness lane
+        resolve to ``NonFiniteOutputError`` and trip their tenant's
+        breaker; finite requests in the same batch are served normally."""
         if not self._queue:
             return
+        now_t = time.monotonic() if now is None else now
         batch, self._queue = self._queue, []
-        gids = np.concatenate([q[0] for q in batch])
-        rows = np.concatenate([q[1] for q in batch])
-        out = self._run(gids, rows)
+        live = []
+        for q in batch:
+            pending = q[2]
+            if pending.deadline is not None and now_t > pending.deadline:
+                self.stats["shed"] += 1
+                pending._set_error(DeadlineExceededError(
+                    f"request shed un-executed: queued at t={q[3]:.6f}, "
+                    f"deadline t={pending.deadline:.6f}, flushed at "
+                    f"t={now_t:.6f}"))
+            else:
+                live.append(q)
+        if not live:
+            return
+        gids = np.concatenate([q[0] for q in live])
+        rows = np.concatenate([q[1] for q in live])
+        try:
+            out, ok = self._run_with_retry(gids, rows)
+        except RetriesExhaustedError as e:
+            for q in live:
+                q[2]._set_error(e)
+            return
         ofs = 0
-        for _, r, pending, _ in batch:
-            pending._set(out[ofs:ofs + r.shape[0]])
-            ofs += r.shape[0]
+        for _, r, pending, _ in live:
+            n = r.shape[0]
+            o, fin = out[ofs:ofs + n], ok[ofs:ofs + n]
+            ofs += n
+            if fin.all():
+                pending._set(o)
+                self.breaker.record_success(pending.model_id)
+            elif self.breaker.enabled:
+                self.stats["nonfinite"] += 1
+                self.breaker.record_failure(pending.model_id, now_t)
+                pending._set_error(NonFiniteOutputError(
+                    pending.model_id,
+                    f"tenant {pending.model_id} produced "
+                    f"{int((~fin).sum())}/{n} non-finite outputs (poisoned "
+                    "tables?); withholding results and opening its "
+                    "circuit breaker"))
+            else:
+                # breaker disabled: legacy silent-NaN behaviour — the
+                # chaos gate injects a poisoned tenant and fails on this
+                self.stats["nonfinite"] += 1
+                pending._set(o)
 
     def predict(self, model_id: int, bins) -> np.ndarray:
         """Synchronous one-shot: enqueue, flush, return (the benchmark's

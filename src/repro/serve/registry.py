@@ -75,6 +75,15 @@ def routed_forest_walk(tables, bins, gids, *, num_steps: int):
     ._ensemble_predict, and the loss link is selected branch-free by the
     gathered ``link_id`` — routed outputs are bit-identical to each
     model's own ``predict_device``.
+
+    Returns ``(out, ok)``: the linked predictions [B] plus a per-request
+    finiteness lane ``ok`` [B] bool, judged on the PRE-link raw score —
+    sigmoid squashes an infinite raw to a finite 1.0/0.0, so a post-link
+    check would hide exactly the poisoned tenants it exists to catch.
+    The lane is one elementwise ``isfinite`` folded into the walk (no new
+    collectives or host transfers — contract ``serve/degraded-walk``);
+    serve.batching's circuit breaker consumes it to quarantine tenants
+    whose tables produce non-finite outputs.
     """
     t = tables["feat"].shape[1]
     b = bins.shape[0]
@@ -101,7 +110,8 @@ def routed_forest_walk(tables, bins, gids, *, num_steps: int):
     node = jax.lax.fori_loop(0, num_steps, body, node)
     per_tree = tables["label"][g_row, t_idx, node]           # [T, B]
     raw = tables["base"][gids] + tables["lr"][gids] * per_tree.sum(axis=0)
-    return jnp.where(tables["link"][gids] == 1, jax.nn.sigmoid(raw), raw)
+    ok = jnp.isfinite(raw)
+    return jnp.where(tables["link"][gids] == 1, jax.nn.sigmoid(raw), raw), ok
 
 
 _routed_jit = jax.jit(routed_forest_walk, static_argnames=("num_steps",))
@@ -336,7 +346,15 @@ class ModelRegistry:
         """Routed predictions for a mixed-tenant batch (convenience path;
         the bucketed server in serve.batching is the production path).
         ``model_ids`` [B] int, ``bins`` [B, K] int32 padded to the
-        registry's feature cap (``pad_bins``)."""
+        registry's feature cap (``pad_bins``).  Returns the linked
+        predictions only; the bucketed server consumes the walk's
+        finiteness lane (``predict_checked``)."""
+        out, _ = self.predict_checked(model_ids, bins)
+        return out
+
+    def predict_checked(self, model_ids, bins) -> tuple:
+        """Routed predictions PLUS the [B] bool finiteness lane (see
+        ``routed_forest_walk`` — judged on the pre-link raw score)."""
         return _routed_jit(self.tables, jnp.asarray(bins, dtype=jnp.int32),
                            jnp.asarray(model_ids, dtype=jnp.int32),
                            num_steps=self._num_steps)

@@ -1,0 +1,523 @@
+"""Resilience: preemption-safe resume, graceful degradation, chaos flips.
+
+Contracts under test (ISSUE 10 acceptance):
+  * round-checkpointed boosting resume is BIT-identical to the
+    uninterrupted fit — in-process (local scalar + multiclass paths) and
+    across a real SIGKILL (subprocess tests, local and forced-8-device
+    mesh) — and a mismatched-config resume is rejected loudly by the fit
+    digest while ``digest=None`` remains the explicit escape hatch;
+  * corrupted checkpoints (truncated shard, flipped byte, garbled
+    manifest) raise ``CheckpointCorruptError``, never load garbage —
+    the bitflip case is the sha256 manifest's job, since npz members
+    are STORED and numpy would happily return the flipped bytes;
+  * the serving degradation surface: bounded admission (QueueFullError,
+    retryable), per-request deadlines (shed with DeadlineExceededError
+    under an injected clock), bounded retry with exponential backoff,
+    and the per-tenant circuit breaker (non-finite outputs withheld,
+    503-style quarantine, half-open recovery, healthy tenants bit-exact
+    throughout);
+  * fit-entry validation rejects non-finite features / labels / weights
+    BY NAME on both ensembles;
+  * the chaos harness's guard flips: disabling the breaker or the
+    digest check turns at least one fault ``unhandled`` (what makes
+    ``bench_chaos --gate --no-breaker/--no-digest`` exit nonzero);
+  * kdd99 downloads retry with backoff, verify payload integrity before
+    caching, and only an explicit ``allow_download=True`` turns total
+    failure into ``DownloadError``.
+"""
+import dataclasses
+import gzip
+import os
+import signal
+import subprocess
+import sys
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError,
+                              CheckpointMismatchError, RoundCheckpointer,
+                              restore_round_state)
+from repro.core import GossConfig, GradientBoostedTrees, TreeConfig, fit_bins
+from repro.core.forest import RandomForest
+from repro.data import make_classification, make_regression
+from repro.resilience import (chain, corrupt_checkpoint, poison_labels,
+                              poison_tenant, preempt_at_round,
+                              PreemptedError, SkewClock, TransientFaults)
+from repro.serve import (AdmissionPolicy, CircuitBreaker,
+                         DeadlineExceededError, ForestServer,
+                         ModelRegistry, NonFiniteOutputError,
+                         QueueFullError, RetriesExhaustedError,
+                         TenantUnavailableError)
+from repro.serve.batching import BatchPolicy
+
+# ---------------------------------------------------------------- fixtures
+
+
+def _binary_problem(m=400, k=5, seed=11):
+    cols, y = make_regression(m, k, seed=seed)
+    table = fit_bins(cols, max_num_bins=32)
+    yb = (np.asarray(y) > np.median(y)).astype(np.float32)
+    return table, yb
+
+
+def _mk_gbt(seed=9, n_trees=5):
+    return GradientBoostedTrees(
+        n_trees=n_trees, learning_rate=0.3,
+        config=TreeConfig(max_depth=3, task="regression_variance"),
+        goss=GossConfig(0.3, 0.2), loss="logistic", seed=seed)
+
+
+def _mk_squared(seed=9, n_trees=4):
+    return GradientBoostedTrees(
+        n_trees=n_trees, learning_rate=0.3,
+        config=TreeConfig(max_depth=3, task="regression_variance"),
+        loss="squared", seed=seed)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return _binary_problem()
+
+
+# ------------------------------------------------- in-process resume parity
+
+
+def test_resume_local_bit_identical(problem, tmp_path):
+    table, yb = problem
+    ck = str(tmp_path / "ck")
+    ref = _mk_gbt().fit(table, yb)
+    p_ref = np.asarray(ref.predict_raw(table.bins))
+
+    est = _mk_gbt()
+    with pytest.raises(PreemptedError):
+        est.fit(table, yb, round_callback=chain(
+            RoundCheckpointer(ck), preempt_at_round(2)))
+    resumed = _mk_gbt().fit(table, yb, resume_from=ck)
+    np.testing.assert_array_equal(
+        p_ref, np.asarray(resumed.predict_raw(table.bins)))
+    assert len(resumed.trees) == ref.n_trees
+
+    # resume also accepts a restored RoundCheckpoint object, any step
+    resumed2 = _mk_gbt().fit(table, yb,
+                             resume_from=restore_round_state(ck, step=1))
+    np.testing.assert_array_equal(
+        p_ref, np.asarray(resumed2.predict_raw(table.bins)))
+
+
+def test_resume_multiclass_bit_identical(tmp_path):
+    cols, y = make_classification(400, 5, 3, seed=4)
+    table = fit_bins(cols, max_num_bins=32)
+    mk = lambda: GradientBoostedTrees(
+        n_trees=4, learning_rate=0.3,
+        config=TreeConfig(max_depth=3, task="regression_variance"),
+        loss="softmax", seed=3)
+    ck = str(tmp_path / "ck")
+    p_ref = np.asarray(mk().fit(table, y).predict_proba(table.bins))
+    est = mk()
+    with pytest.raises(PreemptedError):
+        est.fit(table, y, round_callback=chain(
+            RoundCheckpointer(ck), preempt_at_round(2)))
+    resumed = mk().fit(table, y, resume_from=ck)
+    np.testing.assert_array_equal(
+        p_ref, np.asarray(resumed.predict_proba(table.bins)))
+
+
+def test_digest_mismatch_rejected_and_escape_hatch(problem, tmp_path):
+    table, yb = problem
+    ck = str(tmp_path / "ck")
+    with pytest.raises(PreemptedError):
+        _mk_gbt(seed=9).fit(table, yb, round_callback=chain(
+            RoundCheckpointer(ck), preempt_at_round(2)))
+    # different seed => different fit digest => loud rejection
+    with pytest.raises(CheckpointMismatchError):
+        _mk_gbt(seed=10).fit(table, yb, resume_from=ck)
+    # stripping the digest is the EXPLICIT escape hatch: the mismatched
+    # resume then proceeds (and produces a different ensemble)
+    hatch = restore_round_state(ck)._replace(digest=None)
+    est = _mk_gbt(seed=10)
+    est.fit(table, yb, resume_from=hatch)
+    assert len(est.trees) == est.n_trees
+
+
+def test_checkpointer_every_and_keep_last(problem, tmp_path):
+    table, yb = problem
+    ck = str(tmp_path / "ck")
+    _mk_squared().fit(table, yb, round_callback=RoundCheckpointer(
+        ck, every=2, keep_last=1))
+    steps = sorted(d for d in os.listdir(ck) if d.startswith("step_"))
+    assert steps == ["step_00000004"]        # rounds 2,4 written, 2 pruned
+
+
+@pytest.mark.parametrize("mode", ["truncate", "bitflip", "manifest"])
+def test_corrupt_checkpoint_rejected(problem, tmp_path, mode):
+    table, yb = problem
+    ck = str(tmp_path / "ck")
+    with pytest.raises(PreemptedError):
+        _mk_gbt().fit(table, yb, round_callback=chain(
+            RoundCheckpointer(ck), preempt_at_round(2)))
+    corrupt_checkpoint(ck, mode=mode, seed=1)
+    with pytest.raises(CheckpointCorruptError):
+        restore_round_state(ck)
+    # earlier, intact steps remain restorable
+    assert restore_round_state(ck, step=1).round == 1
+
+
+# ------------------------------------------------ SIGKILL subprocess resume
+
+_KILL_SCRIPT = r"""
+import numpy as np
+from repro.checkpoint import RoundCheckpointer
+from repro.core import GossConfig, GradientBoostedTrees, TreeConfig, fit_bins
+from repro.data import make_regression
+from repro.resilience import chain, kill_at_round
+
+cols, y = make_regression(400, 5, seed=11)
+table = fit_bins(cols, max_num_bins=32)
+yb = (np.asarray(y) > np.median(y)).astype(np.float32)
+est = GradientBoostedTrees(
+    n_trees=5, learning_rate=0.3,
+    config=TreeConfig(max_depth=3, task="regression_variance"),
+    goss=GossConfig(0.3, 0.2), loss="logistic", seed=9)
+est.fit(table, yb, round_callback=chain(
+    RoundCheckpointer({ckdir!r}), kill_at_round(2)))
+print("UNREACHABLE: survived the kill round")
+"""
+
+
+def _run_py(script, extra_env=None, timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    env.update(extra_env or {})
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_sigkill_then_resume_local(tmp_path):
+    ckdir = str(tmp_path / "ck")
+    r = _run_py(_KILL_SCRIPT.format(ckdir=ckdir))
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr)
+    assert "UNREACHABLE" not in r.stdout
+    assert os.path.isdir(os.path.join(ckdir, "step_00000002"))
+    # resume in THIS process from the killed process's checkpoint: the
+    # cross-process half of the bit-identity claim
+    table, yb = _binary_problem()
+    p_ref = np.asarray(_mk_gbt().fit(table, yb).predict_raw(table.bins))
+    resumed = _mk_gbt().fit(table, yb, resume_from=ckdir)
+    np.testing.assert_array_equal(
+        p_ref, np.asarray(resumed.predict_raw(table.bins)))
+
+
+_MESH_PREAMBLE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.checkpoint import RoundCheckpointer
+from repro.core import GossConfig, GradientBoostedTrees, TreeConfig, fit_bins
+from repro.core.distributed import DistConfig
+from repro.data import make_regression
+from repro.resilience import chain, kill_at_round
+
+assert len(jax.devices()) == 8
+MESH = Mesh(np.asarray(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+DIST = DistConfig(data_axes=("data",), model_axis="model")
+
+cols, y = make_regression(1200, 6, seed=3)
+table = fit_bins(cols, max_num_bins=32)
+yb = (np.asarray(y) > np.median(y)).astype(np.float32)
+mk = lambda: GradientBoostedTrees(
+    n_trees=4, learning_rate=0.3,
+    config=TreeConfig(max_depth=4, task="regression_variance",
+                      chunk_slots=64),
+    goss=GossConfig(0.2, 0.2), loss="logistic", seed=7)
+"""
+
+_MESH_KILL = _MESH_PREAMBLE + r"""
+mk().fit(table, yb, mesh=MESH, dist=DIST, round_callback=chain(
+    RoundCheckpointer({ckdir!r}), kill_at_round(2)))
+print("UNREACHABLE: survived the kill round")
+"""
+
+_MESH_RESUME = _MESH_PREAMBLE + r"""
+p_ref = np.asarray(mk().fit(table, yb, mesh=MESH, dist=DIST)
+                   .predict_raw(table.bins))
+resumed = mk().fit(table, yb, mesh=MESH, dist=DIST,
+                   resume_from={ckdir!r})
+np.testing.assert_array_equal(
+    p_ref, np.asarray(resumed.predict_raw(table.bins)))
+print("MESH_RESUME_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sigkill_then_resume_mesh(tmp_path):
+    """Kill a forced-8-device sharded fit mid-ensemble; a fresh process
+    resumes from the dead one's round checkpoint and must match its own
+    uninterrupted mesh fit bit-for-bit."""
+    ckdir = str(tmp_path / "ck")
+    r = _run_py(_MESH_KILL.format(ckdir=ckdir))
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr)
+    assert os.path.isdir(os.path.join(ckdir, "step_00000002"))
+    r = _run_py(_MESH_RESUME.format(ckdir=ckdir))
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "MESH_RESUME_OK" in r.stdout
+
+
+# ------------------------------------------------------ serving degradation
+
+
+@pytest.fixture(scope="module")
+def registry(problem):
+    table, yb = problem
+    reg = ModelRegistry(capacity=2)
+    reg.add("a", _mk_squared(seed=1).fit(table, yb))
+    reg.add("b", _mk_squared(seed=2).fit(table, yb))
+    return reg, np.asarray(table.bins)[:4]
+
+
+def test_submit_backpressure_bounded_queue(registry):
+    reg, rows = registry
+    server = ForestServer(reg, BatchPolicy(),
+                          admission=AdmissionPolicy(max_pending_rows=8))
+    server.submit(0, rows, now=0.0)
+    server.submit(0, rows, now=0.0)
+    with pytest.raises(QueueFullError, match="flush"):
+        server.submit(0, rows, now=0.0)
+    assert server.stats["rejected_full"] == 1
+    server.flush(now=0.0)
+    req = server.submit(0, rows, now=0.0)      # retryable: succeeds now
+    np.testing.assert_array_equal(
+        req.result(),
+        np.asarray(reg.predict(np.zeros(4, np.int32), reg.pad_bins(rows))))
+
+
+def test_deadline_shed_with_injected_clock(registry):
+    reg, rows = registry
+    clock = SkewClock()
+    server = ForestServer(reg, BatchPolicy(),
+                          admission=AdmissionPolicy(deadline=1.0))
+    stale = server.submit(0, rows, now=clock())
+    clock.advance(10.0)
+    fresh = server.submit(0, rows, now=clock())
+    server.flush(now=clock())
+    with pytest.raises(DeadlineExceededError):
+        stale.result()
+    assert stale.exception() is not None and fresh.exception() is None
+    assert server.stats["shed"] == 1
+    np.testing.assert_array_equal(
+        fresh.result(),
+        np.asarray(reg.predict(np.zeros(4, np.int32), reg.pad_bins(rows))))
+
+
+def test_retry_backoff_then_success(registry):
+    reg, rows = registry
+    inj, sleeps = TransientFaults(2), []
+    server = ForestServer(
+        reg, BatchPolicy(),
+        admission=AdmissionPolicy(max_attempts=3, backoff_base=0.05),
+        fault_injector=inj, sleep=sleeps.append)
+    out = server.predict(0, rows)
+    np.testing.assert_array_equal(
+        out,
+        np.asarray(reg.predict(np.zeros(4, np.int32), reg.pad_bins(rows))))
+    assert sleeps == [0.05, 0.1]               # exponential backoff
+    assert inj.calls == 3 and server.stats["retries"] == 2
+
+
+def test_retries_exhausted_is_typed(registry):
+    reg, rows = registry
+    server = ForestServer(
+        reg, BatchPolicy(),
+        admission=AdmissionPolicy(max_attempts=2, backoff_base=0.0),
+        fault_injector=TransientFaults(100), sleep=lambda s: None)
+    req = server.submit(0, rows)
+    server.flush()
+    with pytest.raises(RetriesExhaustedError) as ei:
+        req.result()
+    assert ei.value.attempts == 2
+    assert req.done()                          # resolved, not hung
+
+
+def test_breaker_quarantine_isolation_and_half_open(problem):
+    table, yb = problem
+    rows = np.asarray(table.bins)[:4]
+    reg = ModelRegistry(capacity=2)
+    reg.add("a", _mk_squared(seed=1).fit(table, yb))
+    reg.add("b", _mk_squared(seed=2).fit(table, yb))
+    expect = {m: np.asarray(reg.predict(np.full(4, m, np.int32),
+                                        reg.pad_bins(rows)))
+              for m in (0, 1)}
+    clock = SkewClock()
+    server = ForestServer(
+        reg, BatchPolicy(),
+        breaker=CircuitBreaker(threshold=1, cooldown=5.0))
+    poison_tenant(reg, 0)
+
+    req = server.submit(0, rows, now=clock())
+    server.flush(now=clock())
+    with pytest.raises(NonFiniteOutputError):
+        req.result()
+    assert server.breaker.state(0) == "open"
+    with pytest.raises(TenantUnavailableError):   # 503 while open
+        server.submit(0, rows, now=clock())
+    # the healthy tenant is untouched, bit-exact
+    req = server.submit(1, rows, now=clock())
+    server.flush(now=clock())
+    np.testing.assert_array_equal(req.result(), expect[1])
+
+    # repair + cooldown: the half-open probe serves and closes the circuit
+    reg.remove("a")
+    reg.add("a", _mk_squared(seed=1).fit(table, yb))
+    clock.advance(6.0)
+    req = server.submit(0, rows, now=clock())     # the half-open probe
+    assert server.breaker.state(0) == "half-open"
+    with pytest.raises(TenantUnavailableError):   # one probe at a time
+        server.submit(0, rows, now=clock())
+    server.flush(now=clock())
+    np.testing.assert_array_equal(req.result(), expect[0])
+    assert server.breaker.state(0) == "closed"
+
+
+def test_breaker_disabled_restores_legacy_silent_nan(problem):
+    table, yb = problem
+    rows = np.asarray(table.bins)[:4]
+    reg = ModelRegistry(capacity=2)
+    reg.add("a", _mk_squared(seed=1).fit(table, yb))
+    server = ForestServer(reg, BatchPolicy(),
+                          breaker=CircuitBreaker(enabled=False))
+    poison_tenant(reg, 0)
+    out = server.predict(0, rows)              # the hole the gate flags
+    assert not np.isfinite(out).all()
+
+
+# --------------------------------------------------- fit input validation
+
+
+def test_fit_rejects_poisoned_float_column(problem):
+    table, yb = problem
+    bins = np.asarray(table.bins, dtype=np.float32).copy()
+    bins[7, 2] = np.nan
+    bad = dataclasses.replace(table, bins=bins)
+    with pytest.raises(ValueError, match=r"column 2.*row 7"):
+        _mk_gbt().fit(bad, yb)
+    with pytest.raises(ValueError, match="column 2"):
+        RandomForest(n_trees=2).fit(bad, (yb > 0).astype(np.int32))
+
+
+def test_fit_rejects_nonfinite_labels_and_weights(problem):
+    table, yb = problem
+    with pytest.raises(ValueError, match="non-finite labels"):
+        _mk_gbt().fit(table, poison_labels(yb, [5, 6]))
+    with pytest.raises(ValueError, match="sample_weight"):
+        sw = np.ones(len(yb), np.float32)
+        sw[3] = -1.0
+        _mk_gbt().fit(table, yb, sample_weight=sw)
+    with pytest.raises(ValueError, match="sample_weight"):
+        sw = np.ones(len(yb), np.float32)
+        sw[3] = np.inf
+        RandomForest(n_trees=2).fit(table, (yb > 0).astype(np.int32),
+                                    sample_weight=sw)
+
+
+# --------------------------------------------------------- chaos guard flips
+
+
+@pytest.mark.slow
+def test_chaos_flips_unhandled_when_guards_disabled():
+    """The acceptance criterion behind ``--no-breaker`` / ``--no-digest``:
+    disabling either guard must surface at least one silently-wrong
+    answer, which is what makes the chaos gate exit nonzero."""
+    from repro.resilience import run_chaos
+    rep = run_chaos(seed=0, breaker_enabled=False)
+    assert rep["unhandled"] > 0
+    assert any(o["fault"] == "poison_tenant" and o["outcome"] == "unhandled"
+               for o in rep["outcomes"])
+    rep = run_chaos(seed=0, digest_check=False)
+    assert rep["unhandled"] > 0
+    assert any(o["fault"] == "digest_mismatch"
+               and o["outcome"] == "unhandled" for o in rep["outcomes"])
+
+
+# ------------------------------------------------------------ kdd99 download
+
+
+class _Resp:
+    def __init__(self, data):
+        self._data = data
+
+    def read(self):
+        return self._data
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+def _kdd_line():
+    from repro.data import kdd99
+    f = ["0"] * kdd99.N_FEATURES
+    f[1], f[2], f[3] = "tcp", "http", "SF"
+    return ",".join(f + ["normal."])
+
+
+def test_download_retries_with_backoff_then_raises(tmp_path, monkeypatch):
+    from repro.data import kdd99
+    calls, sleeps = [], []
+
+    def urlopen(url, timeout=None):
+        calls.append(url)
+        raise urllib.error.URLError("connection refused")
+
+    monkeypatch.setattr(urllib.request, "urlopen", urlopen)
+    out = kdd99._download(tmp_path / "x.gz", attempts=3,
+                          backoff_base=0.5, sleep=sleeps.append)
+    assert out is None
+    assert len(calls) == 3 * len(kdd99._URLS)      # bounded, every mirror
+    assert sleeps == [0.5, 1.0]                    # exponential backoff
+    assert len(kdd99._download.last_errors) == len(calls)
+    assert not (tmp_path / "x.gz").exists()
+
+
+def test_download_rejects_corrupt_payload_before_caching(tmp_path,
+                                                         monkeypatch):
+    from repro.data import kdd99
+    payloads = iter([
+        b"<html>404 not found</html>",              # not gzip at all
+        gzip.compress(b"<html>mirror error page</html>"),  # wrong schema
+        gzip.compress((_kdd_line() + "\n").encode() * 5),  # good
+    ])
+    monkeypatch.setattr(urllib.request, "urlopen",
+                        lambda url, timeout=None: _Resp(next(payloads)))
+    dest = tmp_path / "kdd.gz"
+    raw = kdd99._download(dest, attempts=2, sleep=lambda s: None)
+    assert raw is not None and raw.startswith(b"0,tcp,http,SF")
+    assert dest.exists()                           # only the VERIFIED gz
+    num, cats, y = kdd99._parse_raw(raw)
+    assert num.shape == (5, kdd99.N_FEATURES - len(kdd99.CAT_COLS))
+    assert list(y) == [0] * 5
+    errs = kdd99._download.last_errors
+    assert len(errs) == 2 and "BadGzipFile" in errs[0]
+
+
+def test_explicit_allow_download_failure_raises(tmp_path, monkeypatch):
+    from repro.data import kdd99
+
+    def urlopen(url, timeout=None):
+        raise urllib.error.URLError("no route to host")
+
+    monkeypatch.setattr(urllib.request, "urlopen", urlopen)
+    monkeypatch.setattr(kdd99.time, "sleep", lambda s: None)
+    monkeypatch.setenv("REPRO_KDD99_CACHE", str(tmp_path / "cache"))
+    with pytest.raises(kdd99.DownloadError, match="allow_download=True"):
+        kdd99.load_kdd99(m=100, allow_download=True)
+    # the default (env-resolved) path NEVER raises: synthetic fallback
+    cols, y, info = kdd99.load_kdd99(m=100, allow_download=False)
+    assert info["source"] == "synthetic" and len(y) == 100
